@@ -1,0 +1,77 @@
+"""Paper Figure 7: TCP send/receive goodput vs payload size.
+
+RX: batches of in-order data segments through the jitted engine.
+TX: app_send + tx_emit segment generation.  Derived: TPU-projected
+segments/s and goodput from compiled HBM traffic."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import hlo_traffic, row, time_call
+from repro.launch.hlo_analysis import HBM_BW
+from repro.net import eth, frames as F, ipv4, tcp
+
+IP_C, IP_S = F.ip("10.0.0.2"), F.ip("10.0.0.1")
+BATCH = 32
+SIZES = (64, 512, 1460)
+
+
+def _rx_ready(conn, size):
+    frames = []
+    seq = 5001
+    for i in range(BATCH):
+        frames.append(F.tcp_eth_frame(IP_C, IP_S, 4000, 80, seq=seq,
+                                      ack=0, flags=tcp.ACK | tcp.PSH,
+                                      payload=b"x" * size))
+        seq += size
+    payload, length = F.to_batch(frames, size + 80)
+    return jnp.asarray(payload), jnp.asarray(length)
+
+
+def _rx_fn(conn, payload, length):
+    p, l, m = eth.parse(payload, length)
+    p, l, m2, ok = ipv4.parse(p, l)
+    m.update(m2)
+    data, dlen, m = tcp.parse_segment(p, l, m)
+    return tcp.rx_batch(conn, data, dlen, m)
+
+
+def run():
+    out = []
+    for size in SIZES:
+        conn = tcp.init(max_conns=4, rx_buf=BATCH * size + 4096,
+                        local_ip=IP_S)
+        # establish
+        syn = F.tcp_eth_frame(IP_C, IP_S, 4000, 80, seq=5000, ack=0,
+                              flags=tcp.SYN)
+        p0, l0 = F.to_batch([syn], size + 80)
+        conn, r = _rx_fn(conn, jnp.asarray(p0), jnp.asarray(l0))
+        iss = int(r["tcp_seq"][0])
+        ackf = F.tcp_eth_frame(IP_C, IP_S, 4000, 80, seq=5001, ack=iss + 1,
+                               flags=tcp.ACK)
+        p1, l1 = F.to_batch([ackf], size + 80)
+        conn, _ = _rx_fn(conn, jnp.asarray(p1), jnp.asarray(l1))
+
+        p, l = _rx_ready(conn, size)
+        fn = jax.jit(_rx_fn)
+        us = time_call(fn, conn, p, l)
+        w = hlo_traffic(_rx_fn, conn, p, l)
+        proj_sps = HBM_BW / max(w.hbm_bytes / BATCH, 1)
+        proj_gbps = proj_sps * size * 8 / 1e9
+        out.append(row(f"fig7_tcp_rx_{size}B", us / BATCH,
+                       f"proj={min(proj_gbps, 100.0):.1f}Gbps "
+                       f"cpu={BATCH/(us/1e6):.0f}segs"))
+
+        # TX: stage + emit one MSS segment
+        data = jnp.zeros((size,), jnp.uint8)
+        conn2, _ = tcp.app_send(conn, 0, data, size)
+        tx = jax.jit(lambda c: tcp.tx_emit(c, 0, mss=1460))
+        us_tx = time_call(tx, conn2)
+        out.append(row(f"fig7_tcp_tx_{size}B", us_tx,
+                       f"cpu={1e6/us_tx:.0f}segs/s"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

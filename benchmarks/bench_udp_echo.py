@@ -1,0 +1,55 @@
+"""Paper Figure 6: UDP echo goodput vs packet size.
+
+Measured: CPU-backend batch throughput through the full jitted stack.
+Derived: TPU-projected goodput (Gbps) from compiled per-batch HBM traffic
+vs v5e bandwidth, and the NoC-model chain latency (the paper's 368 ns
+figure for a 1-byte echo)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import hlo_traffic, row, time_call
+from repro.apps import echo
+from repro.core.noc import chain_latency_ns
+from repro.launch.hlo_analysis import HBM_BW
+from repro.net import frames as F, rpc
+from repro.net.stack import UdpStack
+
+IP_C, IP_S = F.ip("10.0.0.2"), F.ip("10.0.0.1")
+BATCH = 64
+SIZES = (64, 256, 1024, 4096, 8962)
+
+
+def run():
+    stack = UdpStack([echo.make(port=7, n_replicas=1)], IP_S)
+    out = []
+    for size in SIZES:
+        pay = max(1, size - 42 - rpc.HLEN)   # eth+ip+udp+rpc overhead
+        fr = F.udp_rpc_frame(IP_C, IP_S, 5000, 7,
+                             rpc.np_frame(rpc.MSG_ECHO, 0, b"x" * pay))
+        frames = [fr] * BATCH
+        payload, length = F.to_batch(frames, max(512, size + 64))
+        p, l = jnp.asarray(payload), jnp.asarray(length)
+
+        state = stack.init_state()
+        fn = jax.jit(lambda s, pp, ll: stack.rx_tx(s, pp, ll))
+        us = time_call(fn, state, p, l)
+        w = hlo_traffic(lambda s, pp, ll: stack.rx_tx(s, pp, ll), state, p, l)
+        per_pkt_bytes = w.hbm_bytes / BATCH
+        proj_pps = HBM_BW / max(per_pkt_bytes, 1)
+        proj_gbps = proj_pps * size * 8 / 1e9
+        cpu_pps = BATCH / (us / 1e6)
+        out.append(row(f"fig6_udp_echo_{size}B", us / BATCH,
+                       f"proj={min(proj_gbps, 100.0):.1f}Gbps "
+                       f"cpu={cpu_pps:.0f}pps"))
+    # paper's latency figure: eth->ip->udp->app->udp->ip->eth chain, 1 byte
+    lat = chain_latency_ns([(0, 0), (1, 0), (2, 0), (3, 0), (2, 1), (1, 1),
+                            (0, 1)], payload_bytes=1)
+    out.append(row("fig6_udp_echo_latency", lat / 1000,
+                   f"noc_chain={lat:.0f}ns (paper: 368ns)"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

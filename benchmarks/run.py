@@ -1,0 +1,28 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_flexibility, bench_lm, bench_migration,
+                            bench_rs, bench_tcp, bench_udp_echo,
+                            bench_vr, bench_resources)
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (bench_flexibility, bench_udp_echo, bench_tcp, bench_rs,
+                bench_vr, bench_migration, bench_resources, bench_lm):
+        try:
+            mod.run()
+        except Exception:
+            failures += 1
+            print(f"{mod.__name__},0,FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""The paper's throughput use case: Reed-Solomon (8,2) erasure coding as a
+scale-out application behind the UDP stack (paper §5.1 / Table 2).
+
+Sends 4 KiB storage blocks from a simulated client, encodes them on 1..4
+replicated RS tiles (round-robin dispatch), verifies the parity against
+the GF(256) oracle, and demonstrates recovery of two erased shards.
+
+Run:  PYTHONPATH=src python examples/erasure_coding.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import reed_solomon
+from repro.kernels.rs_encode import gf
+from repro.kernels.rs_encode.ref import rs_encode_np
+from repro.net import frames as F, rpc
+from repro.net.stack import UdpStack
+
+IP_C, IP_S = F.ip("10.0.0.2"), F.ip("10.0.0.1")
+
+
+def gf_solve(A, b):
+    """Solve A x = b over GF(256) (Gaussian elimination)."""
+    A = [[int(v) for v in row] for row in A]
+    b = [row[:] for row in b]
+    n = len(A)
+    for c in range(n):
+        piv = next(i for i in range(c, n) if A[i][c])
+        A[c], A[piv] = A[piv], A[c]
+        b[c], b[piv] = b[piv], b[c]
+        inv = gf.gf_inv(A[c][c])
+        A[c] = [gf.gf_mul(v, inv) for v in A[c]]
+        b[c] = [gf.gf_mul(v, inv) for v in b[c]]
+        for i in range(n):
+            if i != c and A[i][c]:
+                f = A[i][c]
+                A[i] = [v ^ gf.gf_mul(f, w) for v, w in zip(A[i], A[c])]
+                b[i] = [v ^ gf.gf_mul(f, w) for v, w in zip(b[i], b[c])]
+    return b
+
+
+def main():
+    stack = UdpStack([reed_solomon.make(port=9000, n_replicas=4)], IP_S)
+    state = stack.init_state()
+    rng = np.random.default_rng(42)
+    blocks = [rng.integers(0, 256, 4096, dtype=np.uint8) for _ in range(8)]
+    frames = [F.udp_rpc_frame(IP_C, IP_S, 5000 + i, 9000,
+                              rpc.np_frame(rpc.MSG_RS_ENCODE, i,
+                                           b.tobytes()))
+              for i, b in enumerate(blocks)]
+    payload, length = F.to_batch(frames, 4400)
+    state, q, ql, alive, _ = jax.jit(stack.rx_tx)(
+        state, jnp.asarray(payload), jnp.asarray(length))
+    print(f"[stack] {int(alive.sum())}/8 blocks encoded; replica ops = "
+          f"{np.asarray(state['apps']['rs']['ops']).tolist()} (round-robin)")
+
+    # verify + erase-and-recover for block 0
+    from repro.net import eth, ipv4, udp
+    p, l, m = eth.parse(q, ql)
+    p, l, m2, _ = ipv4.parse(p, l)
+    m.update(m2)
+    p, l, m3, _ = udp.parse(p, l, m)
+    body, blen, _, _ = rpc.parse(p, l)
+    parity = np.asarray(body[0, :1024]).reshape(2, 512)
+    data = blocks[0].reshape(8, 512)
+    gm = gf.generator_matrix(8, 2)
+    np.testing.assert_array_equal(parity, rs_encode_np(data, gm))
+    print("[verify] parity matches GF(256) oracle")
+
+    # erase shards 2 and 5; reconstruct from the other 6 + both parities
+    full = np.vstack([np.eye(8, dtype=np.uint8), gm])
+    shards = np.vstack([data, parity])
+    keep = [0, 1, 3, 4, 6, 7, 8, 9]
+    rec = gf_solve(full[keep].tolist(), shards[keep].tolist())
+    np.testing.assert_array_equal(np.asarray(rec, np.uint8), data)
+    print("[recover] two erased shards reconstructed exactly "
+          "(double-fault tolerance, paper's (8,2) configuration)")
+
+
+if __name__ == "__main__":
+    main()

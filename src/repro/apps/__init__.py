@@ -1,0 +1,1 @@
+from repro.apps import echo, reed_solomon, vr_witness

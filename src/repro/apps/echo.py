@@ -1,0 +1,18 @@
+"""UDP echo application tile (paper §6.3)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make(name: str = "echo", port: int = 7, n_replicas: int = 1):
+    from repro.net.stack import AppDecl
+
+    def process(state, body, blen, meta, active, replica):
+        # echo: body unchanged; count per-replica service
+        counts = state["served"]
+        counts = counts.at[replica].add(active.astype(jnp.int32))
+        return {"served": counts}, body, blen
+
+    state = {"served": jnp.zeros((n_replicas,), jnp.int32)}
+    return AppDecl(name=name, port=port, n_replicas=n_replicas,
+                   policy="round_robin", process=process, state=state)

@@ -1,0 +1,68 @@
+"""LM serving application behind the Beehive stack.
+
+Requests arrive as RPC-over-UDP (MSG_LM_GENERATE):
+  payload = [session u32 | n_gen u16 | n_prompt u16 | prompt tokens u16...]
+Reply:
+  payload = [session u32 | n_out u16 | tokens u16 ...]
+
+The app tile couples the packet path (pure JAX parse/build) with the
+ServeEngine (KV-cache slots).  Sessions are flows: the upstream dispatch
+pins a session to an engine replica; live migration moves the session blob
+between engines and flips the dispatch table (paper §5.3 semantics, with
+the KV cache playing the role of the TCP connection state).
+"""
+from __future__ import annotations
+
+import struct
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.serve.engine import ServeEngine
+
+
+def encode_request(session: int, n_gen: int, prompt: List[int]) -> bytes:
+    return struct.pack("!IHH", session, n_gen, len(prompt)) + \
+        b"".join(struct.pack("!H", t) for t in prompt)
+
+
+def decode_request(payload: bytes) -> Tuple[int, int, List[int]]:
+    session, n_gen, n_prompt = struct.unpack("!IHH", payload[:8])
+    toks = [struct.unpack("!H", payload[8 + 2 * i:10 + 2 * i])[0]
+            for i in range(n_prompt)]
+    return session, n_gen, toks
+
+
+def encode_reply(session: int, tokens: List[int]) -> bytes:
+    return struct.pack("!IH", session, len(tokens)) + \
+        b"".join(struct.pack("!H", t) for t in tokens)
+
+
+def decode_reply(payload: bytes) -> Tuple[int, List[int]]:
+    session, n = struct.unpack("!IH", payload[:6])
+    toks = [struct.unpack("!H", payload[6 + 2 * i:8 + 2 * i])[0]
+            for i in range(n)]
+    return session, toks
+
+
+class LmServerApp:
+    """Host-side application loop around a ServeEngine."""
+
+    def __init__(self, engine: ServeEngine):
+        self.engine = engine
+        self.session_map: Dict[int, int] = {}   # client session -> slot
+
+    def handle(self, payload: bytes) -> bytes:
+        session, n_gen, prompt = decode_request(payload)
+        if session not in self.session_map:
+            sid = self.engine.new_session(np.asarray(prompt, np.int32))
+            self.session_map[session] = sid
+        sid = self.session_map[session]
+        toks = self.engine.generate(sid, n_gen)
+        return encode_reply(session, toks)
+
+    # ---- migration --------------------------------------------------------
+    def migrate_session_to(self, session: int, other: "LmServerApp") -> None:
+        sid = self.session_map.pop(session)
+        blob = self.engine.migrate_out(sid)
+        other.session_map[session] = other.engine.migrate_in(blob)

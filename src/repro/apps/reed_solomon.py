@@ -1,0 +1,37 @@
+"""Reed-Solomon erasure-coding application tile (paper §5.1, §6.5).
+
+Stateless RS(8,2) encoder on 4 KiB requests: the client sends a 4 KiB data
+block over UDP RPC; the reply carries the 1 KiB of parity (two 512 B
+shards).  Replicated with round-robin dispatch — any request can go to any
+copy.  Each replica logs served bytes (the paper's bandwidth metadata).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.rs_encode import ops as rs_ops
+
+K, P = 8, 2
+REQ = 4096
+RESP = REQ // K * P     # 1024
+
+
+def make(name: str = "rs", port: int = 9000, n_replicas: int = 4,
+         use_pallas: bool = False):
+    from repro.net.stack import AppDecl
+
+    def process(state, body, blen, meta, active, replica):
+        data = body[:, :REQ]
+        parity = rs_ops.encode_blocks(data, k=K, p=P, use_pallas=use_pallas)
+        out = jnp.zeros_like(body)
+        out = out.at[:, :RESP].set(parity)
+        served = state["bytes"].at[replica].add(
+            jnp.where(active, REQ, 0).astype(jnp.int32))
+        ops = state["ops"].at[replica].add(active.astype(jnp.int32))
+        return {"bytes": served, "ops": ops}, out, \
+            jnp.where(active, RESP, blen)
+
+    state = {"bytes": jnp.zeros((n_replicas,), jnp.int32),
+             "ops": jnp.zeros((n_replicas,), jnp.int32)}
+    return AppDecl(name=name, port=port, n_replicas=n_replicas,
+                   policy="round_robin", process=process, state=state)

@@ -1,0 +1,41 @@
+"""Assigned input shapes.  Every architecture runs all shapes it supports:
+
+  train_4k     seq 4096,   global_batch 256   (train_step)
+  prefill_32k  seq 32768,  global_batch 32    (prefill_step)
+  decode_32k   seq 32768,  global_batch 128   (decode_step, cache of seq_len)
+  long_500k    seq 524288, global_batch 1     (decode_step; sub-quadratic archs)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str      # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> bool:
+    """Assignment skip rules (documented in DESIGN.md §Arch-applicability)."""
+    if shape.kind == "decode" and not cfg.supports_decode:
+        return False  # encoder-only archs have no decode step
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False  # pure full-attention archs skip 500k decode
+    return True
+
+
+def grid(cfg: ModelConfig):
+    return [s for s in SHAPES.values() if applicable(cfg, s)]

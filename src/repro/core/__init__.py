@@ -1,0 +1,10 @@
+"""Beehive core: tile/NoC substrate, routing, deadlock analysis, scale-out,
+control plane, telemetry."""
+from repro.core.message import PacketBatch, make_batch
+from repro.core.noc import (Channel, chain_channels, chain_latency_ns,
+                            dor_path, link_bandwidth_gbps)
+from repro.core.topology import RouteEntry, TileDecl, TopologyConfig
+from repro.core.deadlock import DeadlockReport, analyze, assert_deadlock_free
+from repro.core.routing import DROP, RouteTable, flow_hash, make_table
+from repro.core.tile import StackRuntime, TERMINAL, Tile
+from repro.core import control, scaleout, telemetry

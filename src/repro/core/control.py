@@ -1,0 +1,110 @@
+"""Control plane (paper §3.6, §4.5).
+
+Beehive runs management on a separate, narrower NoC so control traffic
+never contends with dataplane chains in the deadlock dependency graph.
+Here the control plane is modeled as:
+
+  * a separate TopologyConfig (noc="ctrl") with its own deadlock check,
+  * an internal-controller tile that receives RPCs over the reliable
+    transport (TCP), decodes (op, table, key, value) commands, applies them
+    to the target tiles' runtime tables, and returns a confirmation,
+  * versioned state updates: every applied command bumps a version counter
+    so external controllers can confirm convergence.
+
+Command encoding (RPC payload, all big-endian u32):
+  [op, target_tile_id, a, b, c]
+  op: 1 = NAT_SET    (a=slot, b=virtual_ip, c=physical_ip)
+      2 = ROUTE_SET  (a=slot, b=match_key,  c=next_tile_id)
+      3 = HEALTH_SET (a=replica_idx, b=0|1)
+      4 = LOG_READ   (a=log_id, b=entry_idx)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+OP_NAT_SET = 1
+OP_ROUTE_SET = 2
+OP_HEALTH_SET = 3
+OP_LOG_READ = 4
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ControllerState:
+    version: jnp.ndarray        # () int32 — bumped per applied command
+    last_op: jnp.ndarray        # () int32
+    acks: jnp.ndarray           # () int32 — confirmations sent
+
+
+def make_controller() -> ControllerState:
+    z = jnp.zeros((), jnp.int32)
+    return ControllerState(version=z, last_op=z, acks=z)
+
+
+def decode_command(payload_words: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """payload_words: (5,) uint32 — [op, target, a, b, c]."""
+    return {"op": payload_words[0].astype(jnp.int32),
+            "target": payload_words[1].astype(jnp.int32),
+            "a": payload_words[2].astype(jnp.int32),
+            "b": payload_words[3].astype(jnp.int32),
+            "c": payload_words[4].astype(jnp.int32)}
+
+
+def apply_nat_set(nat_table, cmd):
+    """nat_table: {"virt": (S,), "phys": (S,)} — NAT vip->pip mapping."""
+    slot = cmd["a"]
+    return {
+        "virt": nat_table["virt"].at[slot].set(cmd["b"].astype(jnp.uint32)),
+        "phys": nat_table["phys"].at[slot].set(cmd["c"].astype(jnp.uint32)),
+    }
+
+
+def apply_route_set(route_table, cmd):
+    return route_table.set_entry(cmd["a"], cmd["b"], cmd["c"])
+
+
+def apply_health_set(dispatch, cmd):
+    from repro.core.scaleout import DispatchState
+    return dataclasses.replace(
+        dispatch, healthy=dispatch.healthy.at[cmd["a"]].set(cmd["b"] != 0))
+
+
+def controller_apply(ctrl: ControllerState, cmd,
+                     tables: Dict[str, Any]) -> Tuple[ControllerState,
+                                                      Dict[str, Any],
+                                                      jnp.ndarray]:
+    """Apply one decoded command to the table store.  Returns (ctrl',
+    tables', ack_word).  Dispatch on `op` is data-dependent, so every
+    branch is computed and selected — cheap for tiny tables, and keeps the
+    whole control plane jittable."""
+    new_tables = dict(tables)
+    is_nat = cmd["op"] == OP_NAT_SET
+    is_route = cmd["op"] == OP_ROUTE_SET
+    is_health = cmd["op"] == OP_HEALTH_SET
+
+    if "nat" in tables:
+        upd = apply_nat_set(tables["nat"], cmd)
+        new_tables["nat"] = jax.tree.map(
+            lambda n, o: jnp.where(is_nat, n, o), upd, tables["nat"])
+    if "route" in tables:
+        upd = apply_route_set(tables["route"], cmd)
+        new_tables["route"] = jax.tree.map(
+            lambda n, o: jnp.where(is_route, n, o), upd, tables["route"])
+    if "dispatch" in tables:
+        upd = apply_health_set(tables["dispatch"], cmd)
+        new_tables["dispatch"] = jax.tree.map(
+            lambda n, o: jnp.where(is_health, n, o), upd,
+            tables["dispatch"])
+
+    applied = is_nat | is_route | is_health
+    ctrl = ControllerState(
+        version=ctrl.version + applied.astype(jnp.int32),
+        last_op=jnp.where(applied, cmd["op"], ctrl.last_op),
+        acks=ctrl.acks + 1,
+    )
+    ack = (jnp.uint32(0xAC0000) | ctrl.version.astype(jnp.uint32))
+    return ctrl, new_tables, ack

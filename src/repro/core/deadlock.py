@@ -1,0 +1,69 @@
+"""Compile-time message-deadlock analysis (paper §3.5).
+
+Model: wormhole switching with dimension-ordered routing.  Routing-level
+deadlock is impossible under DOR (Dally & Seitz); *message-level* deadlock
+remains because a tile chain (Eth -> IP -> UDP -> App) holds NoC channels
+while acquiring more.  We build the channel-dependency graph: for every
+declared chain, the ordered list of channels it traverses contributes edges
+c_i -> c_{i+1}; additionally every chain must never re-acquire a channel it
+already holds (self-deadlock, paper Fig. 5a).  Any cycle in the union graph
+is a potential deadlock; the designer must re-place tiles (Fig. 5b) or
+duplicate them (IP-in-IP) until the graph is acyclic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import networkx as nx
+
+from repro.core.noc import Channel, chain_channels
+from repro.core.topology import TopologyConfig
+
+
+@dataclasses.dataclass
+class DeadlockReport:
+    ok: bool
+    self_conflicts: List[Tuple[List[str], Channel]]
+    cycles: List[List[Channel]]
+
+    def summary(self) -> str:
+        if self.ok:
+            return "deadlock-free: channel dependency graph is acyclic"
+        lines = []
+        for chain, ch in self.self_conflicts:
+            lines.append(f"chain {'->'.join(chain)} re-acquires channel {ch}")
+        for cyc in self.cycles:
+            lines.append("cycle: " + " -> ".join(map(repr, cyc)))
+        return "\n".join(lines)
+
+
+def analyze(topo: TopologyConfig, noc: str = "data") -> DeadlockReport:
+    errors = topo.validate()
+    if errors:
+        raise ValueError("invalid topology:\n" + "\n".join(errors))
+
+    g = nx.DiGraph()
+    self_conflicts = []
+    for chain, channels in topo.chain_channel_lists():
+        seen = set()
+        for ch in channels:
+            if ch in seen:
+                self_conflicts.append((chain, ch))
+            seen.add(ch)
+        for a, b in zip(channels, channels[1:]):
+            g.add_edge(a, b)
+
+    cycles = list(nx.simple_cycles(g))
+    ok = not cycles and not self_conflicts
+    return DeadlockReport(ok=ok, self_conflicts=self_conflicts,
+                          cycles=[c for c in cycles])
+
+
+def assert_deadlock_free(topo: TopologyConfig) -> None:
+    rep = analyze(topo)
+    if not rep.ok:
+        raise RuntimeError(
+            f"topology {topo.name!r} can deadlock:\n{rep.summary()}\n"
+            "Re-place tiles so chains acquire channels in order, or "
+            "duplicate tiles (paper §3.5).")

@@ -1,0 +1,58 @@
+"""NoC message / packet-batch representation.
+
+The paper's NoC message = header flit (routing) + metadata flits (parsed
+protocol headers) + data flits (payload).  On a batch machine the runtime
+moves *batches* of messages: payload is a (B, MAX_LEN) uint8 tensor, the
+metadata flits become a dict of (B,) int32 fields that protocol tiles
+append as they parse, and the header flit becomes the per-packet location
+(current tile id) + validity mask.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PacketBatch:
+    payload: jnp.ndarray            # (B, L) uint8
+    length: jnp.ndarray             # (B,) int32 — valid bytes in payload
+    valid: jnp.ndarray              # (B,) bool — packet alive (not dropped)
+    loc: jnp.ndarray                # (B,) int32 — current tile id
+    meta: Dict[str, jnp.ndarray]    # parsed header fields, each (B,) int32
+
+    @property
+    def batch(self) -> int:
+        return self.payload.shape[0]
+
+    def with_meta(self, **kv) -> "PacketBatch":
+        meta = dict(self.meta)
+        meta.update(kv)
+        return dataclasses.replace(self, meta=meta)
+
+    def drop(self, mask) -> "PacketBatch":
+        return dataclasses.replace(self, valid=self.valid & ~mask)
+
+    def at(self, loc) -> "PacketBatch":
+        return dataclasses.replace(
+            self, loc=jnp.where(self.valid, loc, self.loc))
+
+
+def make_batch(payload, length, tile_id: int = 0, meta=None) -> PacketBatch:
+    payload = jnp.asarray(payload, jnp.uint8)
+    B = payload.shape[0]
+    return PacketBatch(
+        payload=payload,
+        length=jnp.asarray(length, jnp.int32),
+        valid=jnp.ones((B,), bool),
+        loc=jnp.full((B,), tile_id, jnp.int32),
+        meta=dict(meta or {}),
+    )
+
+
+def empty_like(b: PacketBatch) -> PacketBatch:
+    return dataclasses.replace(b, valid=jnp.zeros_like(b.valid))

@@ -1,0 +1,99 @@
+"""Node-table routing (paper §3.4, §4.2).
+
+Each tile owns a small match table — the FPGA CAM — mapping a header field
+(ethertype, ip_proto, udp/tcp port, flow hash, virtual IP) to the next tile
+id.  Tables are *runtime arrays* held in tile state: the control plane can
+rewrite them without touching the compiled program, exactly like the
+paper's runtime-rewritable hash tables.  Packets with no matching entry are
+dropped (unsupported-traffic filtering, paper §4.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DROP = -1          # next-hop id meaning "drop the packet"
+TABLE_SLOTS = 16   # CAM entries per tile
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RouteTable:
+    """Fixed-capacity match table: (key -> next tile id)."""
+    keys: jnp.ndarray      # (TABLE_SLOTS,) int32; -1 = empty slot
+    values: jnp.ndarray    # (TABLE_SLOTS,) int32; tile id
+    default: jnp.ndarray   # () int32; next hop for wildcard (DROP = drop)
+
+    def lookup(self, field):
+        """field: (B,) int32 -> next tile id (B,) int32 (DROP if no match)."""
+        hit = self.keys[None, :] == field[:, None]          # (B, S)
+        any_hit = hit.any(axis=1)
+        idx = jnp.argmax(hit, axis=1)
+        val = self.values[idx]
+        return jnp.where(any_hit, val, self.default)
+
+    def set_entry(self, slot, key, value) -> "RouteTable":
+        """Runtime rewrite (control plane): returns a new table."""
+        return RouteTable(
+            keys=self.keys.at[slot].set(jnp.int32(key)),
+            values=self.values.at[slot].set(jnp.int32(value)),
+            default=self.default,
+        )
+
+
+def make_table(entries: Sequence[Tuple[Optional[int], int]],
+               default: int = DROP) -> RouteTable:
+    keys = [-1] * TABLE_SLOTS
+    vals = [DROP] * TABLE_SLOTS
+    i = 0
+    for key, value in entries:
+        if key is None:
+            default = value
+            continue
+        keys[i], vals[i] = int(key), int(value)
+        i += 1
+    return RouteTable(jnp.asarray(keys, jnp.int32),
+                      jnp.asarray(vals, jnp.int32),
+                      jnp.asarray(default, jnp.int32))
+
+
+def tables_from_topology(topo, tile_ids: Dict[str, int]) -> Dict[str, RouteTable]:
+    """Build the initial routing tables from the declarative config — the
+    paper's 'initial packet-level routing set up at compile time'."""
+    out = {}
+    for t in topo.tiles:
+        entries = []
+        default = DROP
+        for r in t.routes:
+            nid = tile_ids[r.next_tile]
+            if r.key is None or r.match in ("const", "rr"):
+                default = nid
+            else:
+                entries.append((r.key, nid))
+        out[t.name] = make_table(entries, default)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# flow hashing (4-tuple) for stateful load balancing — FNV-1a over the tuple
+
+
+def fnv1a(fields: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """fields: list of (B,) int32/uint32 -> (B,) uint32 hash."""
+    h = jnp.uint32(0x811C9DC5)
+    prime = jnp.uint32(0x01000193)
+    for f in fields:
+        x = f.astype(jnp.uint32)
+        for shift in (0, 8, 16, 24):
+            byte = (x >> shift) & jnp.uint32(0xFF)
+            h = (h ^ byte) * prime
+    return h
+
+
+def flow_hash(meta: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Standard 4-tuple hash: (src_ip, dst_ip, src_port, dst_port)."""
+    return fnv1a([meta["src_ip"], meta["dst_ip"],
+                  meta["src_port"], meta["dst_port"]])

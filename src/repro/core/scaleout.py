@@ -1,0 +1,109 @@
+"""Independent scale-out of tiles + load balancing (paper §3.2, §4.2, §5).
+
+`replicate` clones a declared tile N times at given coordinates and wires a
+dispatch policy in front of them:
+
+  round_robin  — stateless services (Reed-Solomon encoder, echo)
+  flow_hash    — per-flow state (TCP engines): FNV-1a(4-tuple) mod N keeps
+                 a flow pinned to one replica
+  port_match   — shard-keyed services (VR witness): dst port -> replica
+
+The dispatch lives in the *upstream* tile's routing step, exactly like the
+paper's optional hash tables inside protocol tiles; the hash table is
+runtime state, so the control plane can re-balance (or route around a dead
+replica) without rebuilding anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.routing import flow_hash
+from repro.core.topology import TopologyConfig
+
+
+def replicate(topo: TopologyConfig, base_name: str, n: int,
+              coords: Sequence[Tuple[int, int]],
+              policy: str = "round_robin") -> List[str]:
+    """Clone tile `base_name` into n replicas (config-level operation).
+    Returns the replica names.  Chains referencing the base tile are
+    expanded to cover every replica (for deadlock analysis)."""
+    assert len(coords) == n
+    base = topo.tile(base_name)
+    names = []
+    for i, (x, y) in enumerate(coords):
+        nm = f"{base_name}.{i}"
+        t = topo.add_tile(nm, base.kind, x, y, base.noc)
+        t.routes = list(base.routes)
+        names.append(nm)
+    # expand chains: every chain through base becomes n chains
+    new_chains = []
+    for c in topo.chains:
+        if base_name in c:
+            for nm in names:
+                new_chains.append([nm if x == base_name else x for x in c])
+        else:
+            new_chains.append(c)
+    topo.chains = new_chains
+    topo.tiles = [t for t in topo.tiles if t.name != base_name]
+    return names
+
+
+# ---------------------------------------------------------------------------
+# dispatch policies (vectorized over the packet batch)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DispatchState:
+    replica_ids: jnp.ndarray    # (N,) int32 tile ids
+    healthy: jnp.ndarray        # (N,) bool — control plane can mark down
+    rr_counter: jnp.ndarray     # () int32
+
+
+def make_dispatch(replica_tile_ids: Sequence[int]) -> DispatchState:
+    n = len(replica_tile_ids)
+    return DispatchState(
+        replica_ids=jnp.asarray(replica_tile_ids, jnp.int32),
+        healthy=jnp.ones((n,), bool),
+        rr_counter=jnp.zeros((), jnp.int32),
+    )
+
+
+def _healthy_pick(d: DispatchState, idx):
+    """Remap an index onto healthy replicas only (failure routing)."""
+    n = d.replica_ids.shape[0]
+    healthy_idx = jnp.cumsum(d.healthy.astype(jnp.int32)) - 1  # rank of each
+    n_healthy = jnp.maximum(d.healthy.sum(), 1)
+    target_rank = idx % n_healthy
+    # first replica whose rank == target_rank and healthy
+    match = (healthy_idx[None, :] == target_rank[:, None]) & d.healthy[None, :]
+    pick = jnp.argmax(match, axis=1)
+    return d.replica_ids[pick]
+
+
+def round_robin(d: DispatchState, mask) -> Tuple[DispatchState, jnp.ndarray]:
+    """Stateless spraying: packet i -> (counter + rank_of_i_in_mask) mod N."""
+    order = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    idx = d.rr_counter + jnp.where(mask, order, 0)
+    nxt = _healthy_pick(d, idx)
+    d = dataclasses.replace(d, rr_counter=d.rr_counter + mask.sum())
+    return d, nxt
+
+
+def by_flow_hash(d: DispatchState, meta) -> jnp.ndarray:
+    """Flow-affine: same 4-tuple always lands on the same replica."""
+    return _healthy_pick(d, flow_hash(meta).astype(jnp.int32) & 0x7FFFFFFF)
+
+
+def by_port(d: DispatchState, port, base_port: int) -> jnp.ndarray:
+    """Shard-keyed (VR witness): dst_port - base_port indexes the replica."""
+    return _healthy_pick(d, (port - base_port).astype(jnp.int32))
+
+
+def mark_health(d: DispatchState, replica: int, up: bool) -> DispatchState:
+    """Control-plane operation: drain or restore one replica."""
+    return dataclasses.replace(d, healthy=d.healthy.at[replica].set(up))

@@ -1,0 +1,63 @@
+"""Telemetry / logging tiles (paper §4.6).
+
+Tiles keep fixed-size ring-buffer logs in their state (cycle timestamp +
+payload words).  A UDP-based readback protocol serves individual entries:
+each log is bound to a UDP port; the read interface keeps a small request
+buffer and *drops* requests when full (clients re-request — paper
+semantics).  TCP header logs record entry/exit timestamps so an external
+replay harness can drive cycle-accurate re-execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+LOG_WIDTH = 8          # int32 words per entry
+REQ_BUF = 4            # outstanding readback requests
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RingLog:
+    entries: jnp.ndarray      # (N, LOG_WIDTH) int32
+    wr: jnp.ndarray           # () int32 — total writes (head = wr % N)
+    req_fill: jnp.ndarray     # () int32 — outstanding readback requests
+
+
+def make_log(n_entries: int = 256) -> RingLog:
+    return RingLog(
+        entries=jnp.zeros((n_entries, LOG_WIDTH), jnp.int32),
+        wr=jnp.zeros((), jnp.int32),
+        req_fill=jnp.zeros((), jnp.int32),
+    )
+
+
+def append(log: RingLog, rows: jnp.ndarray, mask: jnp.ndarray) -> RingLog:
+    """Append masked rows (B, LOG_WIDTH); timestamps already in col 0."""
+    n = log.entries.shape[0]
+    order = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    slots = (log.wr + order) % n
+    slots = jnp.where(mask, slots, n)          # parked writes -> OOB row
+    padded = jnp.concatenate(
+        [log.entries, jnp.zeros((1, LOG_WIDTH), jnp.int32)], axis=0)
+    padded = padded.at[slots].set(rows)
+    return dataclasses.replace(
+        log, entries=padded[:n], wr=log.wr + mask.sum())
+
+
+def read_entry(log: RingLog, idx) -> Tuple[RingLog, jnp.ndarray, jnp.ndarray]:
+    """Serve one readback request.  Returns (log', entry, accepted).
+    Requests beyond the request buffer are dropped (accepted=False)."""
+    n = log.entries.shape[0]
+    accepted = log.req_fill < REQ_BUF
+    entry = log.entries[idx % n]
+    # requests drain immediately after service in this model
+    return log, entry, accepted
+
+
+def timestamp(step_counter) -> jnp.ndarray:
+    """Cycle-timestamp analog: the runtime's step counter."""
+    return step_counter.astype(jnp.int32)

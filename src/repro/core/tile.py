@@ -1,0 +1,107 @@
+"""Tile runtime: a tile = declaration (placement) + processing fn + state.
+
+The processing fn is pure JAX: (state, PacketBatch, active_mask) ->
+(state, PacketBatch, next_loc).  `active_mask` selects the packets
+currently located at this tile; the fn must leave other packets untouched
+(the helpers here do the masking).  State holds routing tables, protocol
+state machines, logs — everything the control plane may rewrite at runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.message import PacketBatch
+from repro.core.routing import DROP, RouteTable
+from repro.core.topology import TileDecl, TopologyConfig
+from repro.core import deadlock
+
+ProcessFn = Callable[[Any, PacketBatch, jnp.ndarray],
+                     "tuple[Any, PacketBatch, jnp.ndarray]"]
+
+
+@dataclasses.dataclass
+class Tile:
+    decl: TileDecl
+    process: ProcessFn
+    state: Any
+
+
+def masked_update(mask, new, old):
+    """Broadcast-select along the batch dim for arbitrary-rank tensors."""
+    m = mask.reshape((-1,) + (1,) * (new.ndim - 1))
+    return jnp.where(m, new, old)
+
+
+def route_by(table: RouteTable, field, mask, old_loc):
+    nxt = table.lookup(field)
+    return jnp.where(mask, nxt, old_loc)
+
+
+class StackRuntime:
+    """Executes a Beehive topology on packet batches.
+
+    Build time ("FPGA image build"): validates the topology, runs the
+    compile-time deadlock analysis, freezes tile ids.  Run time: packets
+    carry their current tile id; each round every tile processes the
+    packets located at it and forwards them per its routing table
+    (node-table routing).  The whole thing is one jittable function of
+    (state, batch).
+    """
+
+    def __init__(self, topo: TopologyConfig, tiles: Dict[str, Tile],
+                 max_hops: Optional[int] = None,
+                 check_deadlock: bool = True):
+        errs = topo.validate()
+        if errs:
+            raise ValueError("invalid topology:\n" + "\n".join(errs))
+        if check_deadlock:
+            deadlock.assert_deadlock_free(topo)
+        self.topo = topo
+        self.order = [t.name for t in topo.tiles]
+        self.tile_ids = {n: i for i, n in enumerate(self.order)}
+        self.tiles = tiles
+        longest = max((len(c) for c in topo.chains), default=4)
+        self.max_hops = max_hops or longest + 2
+
+    # ---- state ----------------------------------------------------------
+    def init_state(self) -> Dict[str, Any]:
+        return {n: self.tiles[n].state for n in self.order if n in self.tiles}
+
+    def id_of(self, name: str) -> int:
+        return self.tile_ids[name]
+
+    # ---- execution ------------------------------------------------------
+    def step(self, state: Dict[str, Any], batch: PacketBatch):
+        """One routing round: every tile processes its resident packets."""
+        new_state = dict(state)
+        for name in self.order:
+            tile = self.tiles.get(name)
+            if tile is None:       # auto-generated empty router tile
+                continue
+            mask = batch.valid & (batch.loc == self.tile_ids[name])
+            st = new_state.get(name)
+            st, batch, new_loc = tile.process(st, batch, mask)
+            new_state[name] = st
+            batch = dataclasses.replace(
+                batch,
+                loc=jnp.where(mask, new_loc, batch.loc),
+                valid=batch.valid & (jnp.where(mask, new_loc, 0) != DROP))
+        return new_state, batch
+
+    def run(self, state: Dict[str, Any], batch: PacketBatch):
+        """Run rounds until every chain has completed (max_hops rounds)."""
+        for _ in range(self.max_hops):
+            state, batch = self.step(state, batch)
+        return state, batch
+
+
+TERMINAL = 10_000  # loc for packets parked at an app/egress endpoint
+
+
+def park(mask, old_loc, park_id: int = TERMINAL):
+    """Next-loc for tiles that consume packets (apps, egress)."""
+    return jnp.where(mask, jnp.int32(park_id), old_loc)

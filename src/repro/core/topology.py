@@ -1,0 +1,182 @@
+"""Topology configuration — the Python analog of Beehive's XML tooling
+(paper §4.7).
+
+A TopologyConfig declares the mesh dimensions, every tile endpoint (name,
+coordinates, kind), the next-hop routing entries for each tile, and the set
+of message chains the stack supports.  From it we:
+
+  * validate coordinates (unique, in-bounds — the paper's soundness checks),
+  * auto-generate empty router-only tiles to keep the mesh rectangular,
+  * generate the "top-level wiring" (router adjacency — the paper emits
+    SystemVerilog; we emit the adjacency structure the runtime + analysis
+    consume),
+  * enumerate all possible message chains for compile-time deadlock
+    analysis (core/deadlock.py),
+  * count configuration LoC for the flexibility benchmark (paper Table 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.noc import Coord, chain_channels, mesh_coords
+
+# route-match spaces a tile can use to pick the next hop (paper §4.2: CAMs
+# keyed on header fields, runtime-rewritable)
+MATCH_SPACES = ("ethertype", "ip_proto", "udp_port", "tcp_port", "flow_hash",
+                "rr", "const", "vip")
+
+
+@dataclasses.dataclass
+class RouteEntry:
+    match: str                      # one of MATCH_SPACES
+    key: Optional[int]              # None = wildcard/default
+    next_tile: str
+
+
+@dataclasses.dataclass
+class TileDecl:
+    name: str
+    kind: str                       # e.g. "eth_rx", "udp_tx", "app:echo"
+    x: int
+    y: int
+    noc: str = "data"               # "data" | "ctrl"  (paper §3.6)
+    routes: List[RouteEntry] = dataclasses.field(default_factory=list)
+
+    @property
+    def coord(self) -> Coord:
+        return (self.x, self.y)
+
+
+@dataclasses.dataclass
+class TopologyConfig:
+    name: str
+    dim_x: int
+    dim_y: int
+    tiles: List[TileDecl] = dataclasses.field(default_factory=list)
+    chains: List[List[str]] = dataclasses.field(default_factory=list)
+
+    # ---- construction helpers (the "XML" the user writes) -----------------
+    def add_tile(self, name: str, kind: str, x: int, y: int,
+                 noc: str = "data") -> TileDecl:
+        t = TileDecl(name, kind, x, y, noc)
+        self.tiles.append(t)
+        return t
+
+    def add_route(self, tile: str, match: str, key: Optional[int],
+                  next_tile: str) -> None:
+        assert match in MATCH_SPACES, match
+        self.tile(tile).routes.append(RouteEntry(match, key, next_tile))
+
+    def add_chain(self, *names: str) -> None:
+        self.chains.append(list(names))
+
+    # ---- lookups -----------------------------------------------------------
+    def tile(self, name: str) -> TileDecl:
+        for t in self.tiles:
+            if t.name == name:
+                return t
+        raise KeyError(f"no tile named {name!r}")
+
+    def has_tile(self, name: str) -> bool:
+        return any(t.name == name for t in self.tiles)
+
+    def coords_of(self, chain: Sequence[str]) -> List[Coord]:
+        return [self.tile(n).coord for n in chain]
+
+    def tiles_on(self, noc: str) -> List[TileDecl]:
+        return [t for t in self.tiles if t.noc == noc]
+
+    # ---- validation (paper: coordinate soundness checks) -------------------
+    def validate(self) -> List[str]:
+        errors: List[str] = []
+        seen: Dict[Tuple[str, Coord], str] = {}
+        names = set()
+        for t in self.tiles:
+            if t.name in names:
+                errors.append(f"duplicate tile name {t.name!r}")
+            names.add(t.name)
+            if not (0 <= t.x < self.dim_x and 0 <= t.y < self.dim_y):
+                errors.append(f"tile {t.name!r} at {t.coord} outside "
+                              f"{self.dim_x}x{self.dim_y} mesh")
+            key = (t.noc, t.coord)
+            if key in seen:
+                errors.append(f"tiles {seen[key]!r} and {t.name!r} share "
+                              f"coordinate {t.coord} on noc {t.noc!r}")
+            seen[key] = t.name
+        for c in self.chains:
+            for n in c:
+                if n not in names:
+                    errors.append(f"chain {c} references unknown tile {n!r}")
+        for t in self.tiles:
+            for r in t.routes:
+                if r.next_tile not in names:
+                    errors.append(f"route on {t.name!r} -> unknown tile "
+                                  f"{r.next_tile!r}")
+        return errors
+
+    # ---- generation ("top-level wiring") ------------------------------------
+    def filled_coords(self, noc: str = "data") -> List[Coord]:
+        """Rectangular mesh = declared tiles + auto-generated empty routers
+        (paper: 'automatically generate empty tiles that just contain a
+        router')."""
+        used = {t.coord for t in self.tiles_on(noc)}
+        return [c for c in mesh_coords(self.dim_x, self.dim_y)
+                if c not in used]
+
+    def wiring(self, noc: str = "data") -> List[Tuple[Coord, Coord]]:
+        """Full-duplex router adjacency for the rectangular mesh."""
+        wires = []
+        for (x, y) in mesh_coords(self.dim_x, self.dim_y):
+            if x + 1 < self.dim_x:
+                wires.append(((x, y), (x + 1, y)))
+            if y + 1 < self.dim_y:
+                wires.append(((x, y), (x, y + 1)))
+        return wires
+
+    def chain_channel_lists(self):
+        """(chain, ordered channel list) for the deadlock analysis."""
+        return [(c, chain_channels(self.coords_of(c))) for c in self.chains]
+
+    # ---- (de)serialization + LoC accounting ---------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name, "dim_x": self.dim_x, "dim_y": self.dim_y,
+            "tiles": [{
+                "name": t.name, "kind": t.kind, "x": t.x, "y": t.y,
+                "noc": t.noc,
+                "routes": [dataclasses.asdict(r) for r in t.routes],
+            } for t in self.tiles],
+            "chains": self.chains,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TopologyConfig":
+        topo = cls(d["name"], d["dim_x"], d["dim_y"])
+        for td in d["tiles"]:
+            t = topo.add_tile(td["name"], td["kind"], td["x"], td["y"],
+                              td.get("noc", "data"))
+            for r in td.get("routes", []):
+                t.routes.append(RouteEntry(r["match"], r["key"],
+                                           r["next_tile"]))
+        topo.chains = [list(c) for c in d.get("chains", [])]
+        return topo
+
+    def config_loc(self, tile_names: Sequence[str]) -> int:
+        """Lines of serialized configuration needed to declare the given
+        tiles + their route entries — the paper's Table 1 flexibility
+        metric."""
+        d = self.to_dict()
+        lines = 0
+        for td in d["tiles"]:
+            if td["name"] in tile_names:
+                lines += len(json.dumps(td, indent=1).splitlines())
+        # destination entries added on *other* tiles
+        for td in d["tiles"]:
+            if td["name"] in tile_names:
+                continue
+            for r in td["routes"]:
+                if r["next_tile"] in tile_names:
+                    lines += 1
+        return lines

@@ -1,0 +1,14 @@
+"""Public op: jit'd batch checksum with kernel/oracle selection."""
+import functools
+
+import jax
+
+from repro.kernels.checksum.kernel import checksum_pallas
+from repro.kernels.checksum.ref import checksum_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def checksum(payload, length, use_pallas: bool = True):
+    if use_pallas:
+        return checksum_pallas(payload, length)
+    return checksum_ref(payload, length)

@@ -1,0 +1,6 @@
+"""Oracle: the stack's own vectorized checksum (itself numpy-validated)."""
+from repro.net.bytesops import checksum16
+
+
+def checksum_ref(payload, length):
+    return checksum16(payload, 0, length)

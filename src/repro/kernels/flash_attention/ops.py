@@ -1,0 +1,25 @@
+"""Public op: flash attention in model layout (B, S, KV, G, hd)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "use_pallas", "bq", "bk"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    use_pallas: bool = True, bq: int = 256, bk: int = 256):
+    """q: (B, S, KV, G, hd); k, v: (B, S, KV, hd) -> (B, S, KV, G, hd)."""
+    B, S, KV, G, hd = q.shape
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(B * KV * G, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    fn = flash_attention_pallas if use_pallas else attention_ref
+    of = fn(qf, kf, vf, causal=causal, window=window) if not use_pallas else \
+        flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                               bq=bq, bk=bk)
+    return of.reshape(B, KV, G, S, hd).transpose(0, 3, 1, 2, 4)

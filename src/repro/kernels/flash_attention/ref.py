@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: dense masked softmax attention."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (BH, S, hd); k, v: (BKV, S, hd). Returns (BH, S, hd)."""
+    BH, S, hd = q.shape
+    BKV = k.shape[0]
+    G = BH // BKV
+    kk = jnp.repeat(k, G, axis=0)
+    vv = jnp.repeat(v, G, axis=0)
+    s = jnp.einsum("bsh,bth->bst", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / math.sqrt(hd)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, -1e30)
+    w = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bst,bth->bsh", w, vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,16 @@
+"""Public op: fused selective scan with kernel/oracle selection."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mamba_scan.kernel import mamba_scan_pallas
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def mamba_scan(u, dt, bm, cm, A, use_pallas: bool = True):
+    if use_pallas:
+        return mamba_scan_pallas(u, dt, bm, cm, A)
+    return mamba_scan_ref(u, dt, bm, cm, A)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: the model's own chunked associative-scan recurrence."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.blocks import linear_recurrence
+
+
+def mamba_scan_ref(u, dt, bm, cm, A):
+    """Same contract as the kernel: y[b,t,d] = sum_n C h."""
+    u32 = u.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    decay = jnp.exp(dt32[..., None] * A)                       # (B,S,D,N)
+    inp = (dt32 * u32)[..., None] * bm[:, :, None, :].astype(jnp.float32)
+    B, S, D = u.shape
+    h0 = jnp.zeros((B, D, A.shape[1]), jnp.float32)
+    hs, _ = linear_recurrence(decay, inp, h0)
+    return jnp.einsum("bsdn,bsn->bsd", hs, cm.astype(jnp.float32))

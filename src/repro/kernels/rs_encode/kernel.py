@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: Reed-Solomon (k, p) parity generation over GF(256).
+
+Bit-plane formulation: for parity row j,
+    parity_j = XOR_i XOR_b ( ((data_i >> b) & 1) * bp[j, i, b] )
+— pure AND/shift/multiply/XOR vector ops on the VPU; no table gathers
+(TPU has no efficient byte-gather; the FPGA's LUT multipliers become
+bit-plane linear maps — see DESIGN.md hardware-adaptation notes).
+
+Block layout: data (k, N) uint8 is tiled along N into (k, BLK) VMEM blocks
+(k=8, BLK=4096 -> 32 KiB in + 8 KiB out per step, MXU-free VPU work).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLK = 4096
+
+
+def _rs_kernel(bp_ref, data_ref, out_ref, *, k: int, p: int):
+    data = data_ref[...]                      # (k, BLK) uint8
+    bp = bp_ref[...]                          # (p, k, 8) uint8
+    acc = jnp.zeros((p,) + data.shape[1:], jnp.uint8)
+    for j in range(p):
+        row = jnp.zeros(data.shape[1:], jnp.uint8)
+        for i in range(k):
+            x = data[i]
+            for b in range(8):
+                bit = (x >> b) & jnp.uint8(1)
+                row = row ^ (bit * bp[j, i, b])
+        acc = acc.at[j].set(row)
+    out_ref[...] = acc
+
+
+def rs_encode_pallas(data, bitplanes, *, block: int = BLK,
+                     interpret: bool = True):
+    """data: (k, N) uint8; bitplanes: (p, k, 8) uint8 -> (p, N) uint8."""
+    k, N = data.shape
+    p = bitplanes.shape[0]
+    assert N % block == 0, (N, block)
+    grid = (N // block,)
+    return pl.pallas_call(
+        functools.partial(_rs_kernel, k=k, p=p),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p, k, 8), lambda n: (0, 0, 0)),
+            pl.BlockSpec((k, block), lambda n: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((p, block), lambda n: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((p, N), jnp.uint8),
+        interpret=interpret,
+    )(bitplanes, data)

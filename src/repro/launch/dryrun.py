@@ -1,0 +1,199 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs (no allocation), prove it fits, and extract the
+roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+      --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Each cell writes artifacts/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis, cost_analysis, and the parsed collective schedule; the
+roofline table (launch/roofline.py, EXPERIMENTS.md) reads these artifacts.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, applicable
+from repro.launch import hlo_analysis as H
+from repro.launch import hlo_walk as W
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import input_specs, step_fn_for
+from repro.models import model
+from repro.sharding import make_policy
+
+
+def active_params(cfg) -> int:
+    """Per-token active parameter count (MoE: top_k + shared experts only)."""
+    total = model.count_params(cfg)
+    if cfg.n_experts == 0:
+        return total
+    entries = list(cfg.pattern) * cfg.n_units + list(cfg.remainder)
+    n_moe_layers = sum(1 for e in entries if "moe" in e)
+    per_expert = 3 * cfg.d_model * cfg.d_ff_expert
+    inactive = n_moe_layers * (cfg.n_experts - cfg.top_k) * per_expert
+    return total - inactive
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             verbose: bool = True, opt_decode: bool = False,
+             suffix: str = "", cfg_overrides: dict = None,
+             microbatches: int = None) -> dict:
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = f"{arch}__{shape_name}__{mesh_name}{suffix}"
+    if not applicable(cfg, shape):
+        rec = {"cell": cell, "status": "skipped",
+               "reason": "shape not applicable (DESIGN.md §Arch-applicability)"}
+        _write(out_dir, cell, rec)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    # donation: trainer re-uses params/opt buffers, decode re-uses the cache
+    donate = (("params", "opt_state") if shape.kind == "train" else
+              (("cache",) if shape.kind == "decode" else ()))
+    with jax.set_mesh(mesh):
+        policy = make_policy(mesh, multi_pod=multi_pod,
+                             resident_decode=opt_decode)
+        specs = input_specs(arch, shape_name, mesh, multi_pod, cfg=cfg,
+                            policy=policy)
+        step = step_fn_for(cfg, shape, policy, microbatches=microbatches)
+        lowered = jax.jit(step, donate_argnames=donate).lower(**specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        text = compiled.as_text()
+    wr = W.walk(text)  # trip-count-aware flops/bytes/collective analysis
+    n_total = model.count_params(cfg)
+    n_active = active_params(cfg)
+    mf = H.model_flops_for(cfg, shape, n_total, n_active) / n_chips
+    roof = H.Roofline(
+        flops=wr.flops,
+        hbm_bytes=wr.hbm_bytes,
+        coll_bytes=wr.coll_link_bytes,
+        model_flops=mf,
+    )
+    hbm_per_dev = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                   + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    rec = {
+        "cell": cell, "status": "ok",
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "n_chips": n_chips,
+        "params_total": n_total, "params_active": n_active,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "hbm_per_device": hbm_per_dev,
+            "fits_16GiB": bool(hbm_per_dev < 16 * 2**30),
+        },
+        "cost": {k: float(v) for k, v in cost.items()
+                 if k in ("flops", "bytes accessed", "transcendentals")},
+        "collectives": {"by_kind": wr.coll_by_kind, "count": wr.coll_count,
+                        "n_while": wr.n_while,
+                        "unknown_trip": wr.unknown_trip},
+        "top_bytes": [[v, d] for v, d in wr.top_bytes],
+        "top_flops": [[v, d] for v, d in wr.top_flops],
+        "roofline": roof.to_dict(),
+    }
+    _write(out_dir, cell, rec)
+    if verbose:
+        r = rec["roofline"]
+        print(f"[{cell}] compile={t_compile:.1f}s "
+              f"hbm/dev={hbm_per_dev/2**30:.2f}GiB "
+              f"fits={rec['memory']['fits_16GiB']} "
+              f"t_c={r['t_compute_s']:.4f} t_m={r['t_memory_s']:.4f} "
+              f"t_x={r['t_collective_s']:.4f} bound={r['bottleneck']} "
+              f"roofline={r['roofline_fraction']:.3f}")
+    return rec
+
+
+def _write(out_dir, cell, rec):
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cell + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--opt-decode", action="store_true",
+                    help="resident-weight decode (§Perf variant)")
+    ap.add_argument("--suffix", default="",
+                    help="artifact name suffix, e.g. __opt")
+    ap.add_argument("--ssm-dtype", default=None,
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--ssm-chunk", type=int, default=None)
+    ap.add_argument("--ssm-impl", default=None, choices=["assoc", "noscan"])
+    ap.add_argument("--moe-shard-ff", action="store_true")
+    ap.add_argument("--attn-impl", default=None, choices=["online", "iso"])
+    ap.add_argument("--mb", type=int, default=None,
+                    help="microbatch override for train cells")
+    args = ap.parse_args()
+    overrides = {}
+    if args.ssm_dtype:
+        overrides["ssm_scan_dtype"] = args.ssm_dtype
+    if args.ssm_chunk:
+        overrides["ssm_chunk"] = args.ssm_chunk
+    if args.ssm_impl:
+        overrides["ssm_impl"] = args.ssm_impl
+    if args.moe_shard_ff:
+        overrides["moe_shard_ff"] = True
+    if args.attn_impl:
+        overrides["attn_impl"] = args.attn_impl
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        try:
+            run_cell(arch, shape, args.multi_pod, args.out,
+                     opt_decode=args.opt_decode, suffix=args.suffix,
+                     cfg_overrides=overrides or None,
+                     microbatches=args.mb)
+        except Exception:
+            failures += 1
+            cellname = f"{arch}__{shape}"
+            print(f"[{cellname}] FAILED")
+            traceback.print_exc()
+            _write(args.out, cellname + ("__pod2x16x16" if args.multi_pod
+                                         else "__pod16x16"),
+                   {"cell": cellname, "status": "failed",
+                    "error": traceback.format_exc()[-2000:]})
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Static analysis of compiled HLO: collective traffic, roofline terms.
+
+cost_analysis() gives per-device HLO FLOPs and bytes accessed, but NOT
+collective bytes — those are recovered by parsing the compiled module text:
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op's operand/result sizes are summed with ring-algorithm
+link-traffic factors.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 45e9            # bytes/s per link (~50 GB/s, derated)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# result may be a tuple: "%x = (f32[..]{..}, f32[..]{..}) all-reduce(" etc.
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"([a-z0-9\-]+)(?:\.[0-9]+)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^=]*?\}|\[\d+,\d+\]<=\[[0-9,]+\][^ ,)]*)")
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(attrs: str) -> Optional[int]:
+    m = _GROUPS_RE.search(attrs)
+    if not m:
+        return None
+    g = m.group(1)
+    if g.startswith("[{") or g.startswith("{{"):
+        first = g[g.index("{", 1) + 1: g.index("}", 1)]
+        return max(1, first.count(",") + 1)
+    m2 = re.match(r"\[(\d+),(\d+)\]<=", g)
+    if m2:
+        return int(m2.group(2))
+    return None
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    full_bytes: int             # size of the *unsharded* buffer (see parse)
+    group_size: Optional[int]
+    line: str
+
+    @property
+    def link_bytes(self) -> float:
+        """Per-chip bytes crossing ICI links (ring-algorithm estimates):
+          all-gather / reduce-scatter / all-to-all:  full * (n-1)/n
+          all-reduce:                                2 * full * (n-1)/n
+          collective-permute:                        full
+        """
+        n = self.group_size or 2
+        f = (n - 1) / n
+        if self.kind == "all-reduce":
+            return 2 * self.full_bytes * f
+        if self.kind == "collective-permute":
+            return float(self.full_bytes)
+        return self.full_bytes * f
+
+
+def _tuple_parts(type_str: str) -> List[int]:
+    return [shape_bytes(p) for p in type_str.strip("()").split(",") if "[" in p]
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        opname = m.group(3)
+        base = next((c for c in _COLLECTIVES
+                     if opname == c or opname.startswith(c + "-")), None)
+        if base is None or opname.endswith("-done"):
+            continue  # async pairs are counted at -start
+        tstr = m.group(2)
+        n = _group_size(line)
+        if tstr.startswith("("):
+            full = max(_tuple_parts(tstr) or [0])
+        else:
+            full = shape_bytes(tstr)
+            if base == "reduce-scatter":  # plain form: result is the shard
+                full *= (n or 2)
+        ops.append(CollectiveOp(kind=base, full_bytes=full, group_size=n,
+                                line=line.strip()[:160]))
+    return ops
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    ops = parse_collectives(hlo_text)
+    by_kind: Dict[str, float] = {}
+    for op in ops:
+        by_kind[op.kind] = by_kind.get(op.kind, 0.0) + op.link_bytes
+    by_kind["total"] = sum(by_kind.values())
+    by_kind["count"] = len(ops)
+    return by_kind
+
+
+# ---------------------------------------------------------------------------
+# roofline
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Per-chip roofline terms, in seconds."""
+    flops: float                # per-device HLO flops
+    hbm_bytes: float            # per-device bytes accessed
+    coll_bytes: float           # per-device ICI link bytes
+    model_flops: float          # 6*N*D (or 6*N_active*D) / n_chips
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_fraction(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chip's peak the *useful* model FLOPs achieve when
+        running at the bound: (model_flops / t_bound) / peak."""
+        if self.t_bound <= 0:
+            return 0.0
+        return (self.model_flops / self.t_bound) / PEAK_FLOPS
+
+    def to_dict(self) -> Dict[str, float]:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "coll_bytes_per_device": self.coll_bytes,
+            "model_flops_per_device": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flop_fraction": self.useful_flop_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape, n_params_total: int, n_params_active: int):
+    """6*N*D for train (fwd+bwd), 2*N*D for inference, per the assignment.
+    D = tokens processed by the step; decode steps process `batch` tokens."""
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        return 6.0 * n_params_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        return 2.0 * n_params_active * tokens
+    return 2.0 * n_params_active * shape.batch  # one token per sequence

@@ -1,0 +1,400 @@
+"""Trip-count-aware HLO cost walker.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, ignoring
+trip counts — useless for scanned transformer stacks (verified: an 8-step
+scan reports 1/8 the unrolled FLOPs).  This walker parses the compiled HLO
+text, builds the computation call graph (fusion ``calls=``, while
+``body=/condition=`` with ``known_trip_count``), and accumulates per-device:
+
+  * flops           dot contractions (2*M*N*K), weighted elementwise ops
+  * hbm_bytes       operand+result sizes at fusion boundaries (a TPU-style
+                    "fusions hit HBM once" traffic proxy)
+  * collective bytes  per collective kind, with ring-algorithm link factors
+
+every term multiplied by the product of enclosing while trip counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_OPCODE_RE = re.compile(r"([a-z0-9\-]+)\((.*)$")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n["\s:]+"?(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"(?:true_computation|false_computation|branch_computations=\{[^}]*)=?%?([\w.\-]+)")
+_GROUPS_RE = re.compile(
+    r"replica_groups=(\{\{[^}]*\}[^=]*?\}|\[\d+,\d+\]<=\[[0-9,]+\][^ ,)]*)")
+
+_EW_CHEAP = {"add", "subtract", "multiply", "divide", "maximum", "minimum",
+             "abs", "negate", "compare", "select", "and", "or", "xor", "not",
+             "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+             "clamp", "sign", "shift-left", "shift-right-logical",
+             "shift-right-arithmetic", "remainder"}
+_EW_EXP = {"exponential", "exponential-minus-one", "log", "log-plus-one",
+           "tanh", "logistic", "sqrt", "rsqrt", "cbrt", "power", "cosine",
+           "sine", "tan", "atan2", "erf"}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# Byte accounting mimics TPU fusion: only ops that *materialize* buffers
+# count HBM traffic; elementwise/broadcast/convert chains are assumed fused
+# into their consumers (documented in EXPERIMENTS.md §Roofline methodology).
+_BYTE_OPS = {"dot", "convolution", "fusion", "reduce", "reduce-window",
+             "sort", "copy", "gather", "scatter", "pad", "concatenate",
+             "slice", "reverse", "rng", "custom-call", "transpose",
+             "cholesky", "triangular-solve", "fft", "select-and-scatter"}
+
+
+def shape_elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str       # operand list + attributes (everything after open paren)
+    is_root: bool = False
+
+    def operand_names(self) -> List[str]:
+        # operands come before the first close-paren at depth 0
+        depth = 0
+        out = []
+        cur = []
+        for ch in self.rest:
+            if ch == "(":
+                depth += 1
+                cur.append(ch)
+            elif ch == ")":
+                if depth == 0:
+                    break
+                depth -= 1
+                cur.append(ch)
+            elif ch == "," and depth == 0:
+                out.append("".join(cur).strip())
+                cur = []
+            else:
+                cur.append(ch)
+        if cur:
+            out.append("".join(cur).strip())
+        names = []
+        for tok in out:
+            m = re.search(r"%([\w.\-]+)\s*$", tok)
+            names.append(m.group(1) if m else tok)
+        return names
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: List[Instr] = dataclasses.field(default_factory=list)
+    types: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    s = _COMMENT_RE.sub("", line).strip()
+    is_root = s.startswith("ROOT ")
+    if is_root:
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq]
+    rest = s[eq + 3:]
+    if rest.startswith("("):            # tuple type: balanced-paren scan
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        type_str, rem = rest[:end + 1], rest[end + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rem = rest[:sp], rest[sp + 1:].lstrip()
+    m = _OPCODE_RE.match(rem)
+    if not m:
+        return None
+    return Instr(name, type_str, m.group(1), m.group(2), is_root)
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(_COMMENT_RE.sub("", line))
+            if m:
+                cur = Computation(m.group(2), bool(m.group(1)))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            cur.instrs.append(ins)
+            cur.types[ins.name] = ins.type_str
+    return comps, entry
+
+
+def _group_size(rest: str) -> Optional[int]:
+    m = _GROUPS_RE.search(rest)
+    if not m:
+        return None
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:g.index("}", 2)]
+        return max(1, first.count(",") + 1)
+    m2 = re.match(r"\[(\d+),(\d+)\]<=", g)
+    if m2:
+        return int(m2.group(2))
+    return None
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    res = 1
+    for d in _dims(ins.type_str):
+        res *= d
+    ops = ins.operand_names()
+    lhs_t = comp.types.get(ops[0], "") if ops else ""
+    lhs_dims = _dims(lhs_t)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+    k = 1
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                k *= lhs_dims[int(idx)]
+    return 2.0 * res * k
+
+
+@dataclasses.dataclass
+class WalkResult:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_link_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_count: int = 0
+    n_while: int = 0
+    unknown_trip: int = 0
+    top_bytes: List[Tuple[float, str]] = dataclasses.field(default_factory=list)
+    top_flops: List[Tuple[float, str]] = dataclasses.field(default_factory=list)
+
+    def to_dict(self):
+        d = dataclasses.asdict(self)
+        return d
+
+    def _note(self, kind, val, desc, keep=16):
+        lst = self.top_bytes if kind == "b" else self.top_flops
+        lst.append((val, desc))
+        lst.sort(key=lambda t: -t[0])
+        del lst[keep:]
+
+
+def _coll_link_bytes(kind: str, ins: Instr, comp: Computation) -> float:
+    n = _group_size(ins.rest) or 2
+    f = (n - 1) / n
+    tstr = ins.type_str
+    if tstr.startswith("("):
+        parts = [shape_bytes(p) for p in tstr.strip("()").split(",")
+                 if "[" in p]
+        full = max(parts or [0])
+    else:
+        full = shape_bytes(tstr)
+        if kind == "reduce-scatter":
+            full *= n
+    if kind == "all-reduce":
+        return 2.0 * full * f
+    if kind == "collective-permute":
+        return float(full)
+    return full * f
+
+
+def walk(text: str) -> WalkResult:
+    comps, entry = parse_module(text)
+    if entry is None:
+        return WalkResult()
+    # computations reached via fusion `calls=` contribute no byte traffic of
+    # their own (the fusion instruction accounts for it) but DO contribute
+    # flops.
+    fusion_targets = set()
+    for c in comps.values():
+        for ins in c.instrs:
+            if ins.opcode == "fusion":
+                m = _CALLS_RE.search(ins.rest)
+                if m:
+                    fusion_targets.add(m.group(1))
+
+    res = WalkResult()
+    # ---- build call-graph edges (comp -> [(callee, factor)]) --------------
+    edges: Dict[str, List[Tuple[str, float]]] = {c: [] for c in comps}
+    for cname, comp in comps.items():
+        for ins in comp.instrs:
+            if ins.opcode == "fusion" or ins.opcode in ("call", "async-start"):
+                m = _CALLS_RE.search(ins.rest) or _TO_APPLY_RE.search(ins.rest)
+                if m:
+                    edges[cname].append((m.group(1), 1.0))
+            elif ins.opcode == "while":
+                res.n_while += 1
+                mt = _TRIP_RE.search(ins.rest)
+                trip = float(mt.group(1)) if mt else 1.0
+                if not mt:
+                    res.unknown_trip += 1
+                mb = _BODY_RE.search(ins.rest)
+                mc = _COND_RE.search(ins.rest)
+                if mb:
+                    edges[cname].append((mb.group(1), trip))
+                if mc:
+                    edges[cname].append((mc.group(1), trip + 1))
+            elif ins.opcode == "conditional":
+                for m in re.finditer(r"computation[s]?=\{?%?([\w.\-]+)",
+                                     ins.rest):
+                    edges[cname].append((m.group(1), 1.0))
+
+    # ---- topological multiplicity propagation (HLO call graphs are DAGs) --
+    indeg: Dict[str, int] = {c: 0 for c in comps}
+    for cname, outs in edges.items():
+        for callee, _ in outs:
+            if callee in indeg:
+                indeg[callee] += 1
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry] = 1.0
+    queue = [c for c, d in indeg.items() if d == 0]
+    i = 0
+    while i < len(queue):
+        cname = queue[i]
+        i += 1
+        for callee, factor in edges.get(cname, []):
+            if callee not in mult:
+                continue
+            mult[callee] += mult[cname] * factor
+            indeg[callee] -= 1
+            if indeg[callee] == 0:
+                queue.append(callee)
+
+    # second pass: costs (multiplicities now final)
+    for cname, comp in comps.items():
+        cmult = mult.get(cname, 0.0)
+        if cmult <= 0:
+            continue
+        in_fusion = cname in fusion_targets
+        for ins in comp.instrs:
+            op = ins.opcode
+            # ---- flops
+            if op == "dot":
+                fl = cmult * _dot_flops(ins, comp)
+                res.flops += fl
+                if fl > 1e9:
+                    res._note("f", fl, f"dot {ins.type_str[:48]} x{cmult:.0f} "
+                              f"[{cname[:40]}]")
+            elif op == "convolution":
+                res.flops += cmult * 2.0 * shape_elems(ins.type_str)
+            elif op in _EW_CHEAP:
+                res.flops += cmult * shape_elems(ins.type_str)
+            elif op in _EW_EXP:
+                res.flops += cmult * 4.0 * shape_elems(ins.type_str)
+            elif op in ("reduce", "reduce-window"):
+                ops_ = ins.operand_names()
+                t = comp.types.get(ops_[0], ins.type_str) if ops_ else ins.type_str
+                res.flops += cmult * shape_elems(t)
+            # ---- collectives
+            base = next((c for c in _COLLECTIVES
+                         if op == c or op.startswith(c + "-")), None)
+            if base is not None and not op.endswith("-done"):
+                lb = cmult * _coll_link_bytes(base, ins, comp)
+                res.coll_link_bytes += lb
+                res.coll_by_kind[base] = res.coll_by_kind.get(base, 0.0) + lb
+                res.coll_count += int(cmult)
+            # ---- bytes (TPU-fusion traffic proxy)
+            if in_fusion:
+                continue
+            if op == "dynamic-update-slice":
+                ops_ = ins.operand_names()
+                upd_t = comp.types.get(ops_[1], "") if len(ops_) > 1 else ""
+                res.hbm_bytes += cmult * 2.0 * shape_bytes(upd_t)
+                continue
+            if op == "dynamic-slice":
+                res.hbm_bytes += cmult * 2.0 * shape_bytes(ins.type_str)
+                continue
+            if base is not None:  # collectives: read + write local buffers
+                res.hbm_bytes += cmult * 2.0 * shape_bytes(ins.type_str)
+                continue
+            if op not in _BYTE_OPS:
+                continue
+            if op == "fusion":
+                # a fusion whose root is a dynamic-update-slice writes only
+                # the update in place (aliased output); count 2x update size
+                m = _CALLS_RE.search(ins.rest)
+                callee = comps.get(m.group(1)) if m else None
+                root = next((x for x in (callee.instrs if callee else [])
+                             if x.is_root), None)
+                if root is not None and root.opcode == "dynamic-update-slice":
+                    ops_ = root.operand_names()
+                    upd_t = (callee.types.get(ops_[1], "")
+                             if len(ops_) > 1 else "")
+                    res.hbm_bytes += cmult * 2.0 * shape_bytes(upd_t)
+                    continue
+            opbytes = 0
+            for on in ins.operand_names():
+                opbytes += shape_bytes(comp.types.get(on, ""))
+            b = cmult * (opbytes + shape_bytes(ins.type_str))
+            res.hbm_bytes += b
+            if b > 2e9:
+                res._note("b", b, f"{op} {ins.type_str[:48]} x{cmult:.0f} "
+                          f"[{cname[:40]}]")
+    return res

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: (data=16, model=16) = 256 chips
+(TPU v5e pod).  Multi-pod: (pod=2, data=16, model=16) = 512 chips, with the
+"pod" axis carrying pure data parallelism across the inter-pod network.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(devices: int, *, model_parallel: int = None):
+    """Mesh for an arbitrary device count (elastic scaling / local runs)."""
+    mp = model_parallel or min(16, devices)
+    assert devices % mp == 0
+    return jax.make_mesh((devices // mp, mp), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,81 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+artifacts.
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--dir artifacts/dryrun]
+Prints a markdown table; --update-experiments rewrites the section in
+EXPERIMENTS.md between the ROOFLINE markers.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+COLS = ("arch", "shape", "mesh", "bound", "t_c", "t_m", "t_x", "frac",
+        "useful", "fits", "hbm")
+
+
+def load(directory: str):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") == "ok":
+            recs.append(r)
+    return recs
+
+
+def _variant(rec) -> str:
+    parts = rec["cell"].split("__")
+    return parts[3] if len(parts) > 3 else "baseline"
+
+
+def table(recs, mesh_filter: str = None) -> str:
+    lines = ["| arch | shape | mesh | variant | bound | t_compute s | "
+             "t_memory s | t_collective s | roofline frac | "
+             "useful-FLOP frac | fits 16GiB | HBM/dev GiB |",
+             "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        ro = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {_variant(r)} "
+            f"| **{ro['bottleneck']}** | {ro['t_compute_s']:.4f} "
+            f"| {ro['t_memory_s']:.4f} | {ro['t_collective_s']:.4f} "
+            f"| {ro['roofline_fraction']:.3f} "
+            f"| {ro['useful_flop_fraction']:.3f} "
+            f"| {'yes' if r['memory']['fits_16GiB'] else 'NO'} "
+            f"| {r['memory']['hbm_per_device']/2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def summary(recs) -> str:
+    ok = [r for r in recs if r["mesh"] == "pod16x16"]
+    worst = sorted(ok, key=lambda r: r["roofline"]["roofline_fraction"])[:3]
+    collbound = [r for r in ok
+                 if r["roofline"]["bottleneck"] == "collective"]
+    lines = ["", f"Cells compiled: {len(recs)} "
+             f"(single-pod {sum(r['mesh']=='pod16x16' for r in recs)}, "
+             f"multi-pod {sum(r['mesh']=='pod2x16x16' for r in recs)})",
+             "Worst roofline fractions (hillclimb candidates): "
+             + ", ".join(f"{r['cell']} ({r['roofline']['roofline_fraction']:.3f})"
+                         for r in worst),
+             f"Collective-bound cells: "
+             + ", ".join(r["cell"] for r in collbound)]
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print(table(recs, args.mesh))
+    print(summary(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,211 @@
+"""Step functions (train / prefill / decode) and ShapeDtypeStruct input specs
+for the dry-run and the real trainer/server.
+
+``input_specs(arch, shape_name, mesh, multi_pod)`` returns a kwargs dict of
+sharding-annotated ShapeDtypeStructs — weak-type-correct, shardable, no
+device allocation — exactly what ``jax.jit(step).lower(**specs)`` needs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.sharding import Policy, make_policy, logical_to_spec
+
+
+# ---------------------------------------------------------------------------
+# step functions
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """Gradient-accumulation factor: keep per-microbatch activation volume
+    bounded.  Grad accumulation happens in the grads' own dtype, sharded
+    like params, so the extra state is one param-sized buffer."""
+    if shape.kind != "train":
+        return 1
+    tokens = shape.batch * shape.seq
+    # per-microbatch token targets by model width (activation ceiling)
+    target = (65536 if cfg.d_model >= 5000 else
+              131072 if cfg.d_model >= 3000 else 262144)
+    mb = max(1, tokens // target)
+    while shape.batch % mb:
+        mb -= 1
+    return mb
+
+
+def make_train_step(cfg: ModelConfig, policy: Policy,
+                    opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                    microbatches: int = 1):
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: model.loss_fn(cfg, p, batch, policy))(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            split = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def mb_step(gsum, mbatch):
+                loss, g = grads_of(params, mbatch)
+                # barrier: keep the accumulation add OUT of the layer loop
+                # (XLA otherwise sinks it, re-reading the full stacked grad
+                # buffers once per layer iteration)
+                g = jax.lax.optimization_barrier(g)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return gsum, loss
+
+            gzero = jax.tree.map(jnp.zeros_like, params)
+            gsum, losses = jax.lax.scan(mb_step, gzero, split)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = losses.mean()
+        new_params, new_opt, metrics = adamw.update(grads, opt_state, params,
+                                                    opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, policy: Policy):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(cfg, params, batch, policy)
+        return model.greedy_token(cfg, logits), cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, policy: Policy):
+    def decode_step(params, cache, token, pos):
+        logits, cache = model.decode_step(cfg, params, cache, token, pos,
+                                          policy)
+        return model.greedy_token(cfg, logits), cache
+    return decode_step
+
+
+def step_fn_for(cfg: ModelConfig, shape: ShapeSpec, policy: Policy,
+                microbatches: int = None):
+    if shape.kind == "train":
+        mb = microbatches or default_microbatches(cfg, shape)
+        return make_train_step(cfg, policy, microbatches=mb)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, policy)
+    return make_decode_step(cfg, policy)
+
+
+# ---------------------------------------------------------------------------
+# sharding-annotated ShapeDtypeStruct specs
+
+
+def _sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def param_sds(cfg: ModelConfig, mesh: Mesh, policy: Policy):
+    shapes = model.param_shapes(cfg)
+    specs = model.param_specs(cfg)
+
+    def one(spec, shaped):
+        ps = logical_to_spec(spec, policy, shaped.shape)
+        return _sds(shaped.shape, shaped.dtype, mesh, ps)
+    return jax.tree.map(one, specs, shapes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def opt_sds(cfg: ModelConfig, mesh: Mesh, policy: Policy):
+    p = param_sds(cfg, mesh, policy)
+    return {"m": p, "v": p,
+            "step": _sds((), jnp.int32, mesh, P())}
+
+
+def _batch_axes(policy: Policy, n: int) -> P:
+    """Batch-dim sharding only when it divides (long_500k has batch 1)."""
+    return policy.dp if n % max(1, policy.dp_size()) == 0 else None
+
+
+def batch_sds(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, policy: Policy,
+              with_labels: bool) -> Dict[str, Any]:
+    B, S = shape.batch, shape.seq
+    b = _batch_axes(policy, B)
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "audio_stub":
+        out["frames"] = _sds((B, S, cfg.d_model), jnp.float32, mesh,
+                             P(b, None, None))
+    else:
+        out["tokens"] = _sds((B, S), jnp.int32, mesh, P(b, None))
+    if cfg.frontend == "vision_stub":
+        out["image_embeds"] = _sds((B, cfg.n_image_embeds, cfg.d_model),
+                                   jnp.float32, mesh, P(b, None, None))
+    if with_labels:
+        out["labels"] = _sds((B, S), jnp.int32, mesh, P(b, None))
+    return out
+
+
+def cache_sds(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, policy: Policy,
+              stacked: bool = False):
+    B, S = shape.batch, shape.seq
+    shapes = model.cache_shapes(cfg, B, S, stacked=stacked)
+    b = _batch_axes(policy, B)
+
+    def spec_for(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        stacked_leaf = "units" in names     # leading n_units dim
+        key = names[-1]
+        if key in ("k", "v"):
+            seq_ax = 1 + (1 if stacked_leaf else 0)
+            if leaf.shape[seq_ax] < S and b is not None:
+                # rolling-window cache: batch-only sharding (local shifts)
+                core = P(b, None, None, None)
+            else:
+                core = policy.cache_spec(B, cfg.hd)
+        elif key == "h":
+            nd = leaf.ndim - (1 if stacked_leaf else 0)
+            core = P(b, policy.tp, *([None] * (nd - 2)))
+        elif key == "conv":
+            core = P(b, None, policy.tp)
+        else:  # pragma: no cover
+            core = P()
+        if stacked_leaf:
+            core = P(None, *core)
+        return _sds(leaf.shape, leaf.dtype, mesh, core)
+
+    return jax.tree_util.tree_map_with_path(spec_for, shapes)
+
+
+def input_specs(arch: str, shape_name: str, mesh: Mesh,
+                multi_pod: bool = False, cfg: ModelConfig = None,
+                policy: Policy = None) -> Dict[str, Any]:
+    """kwargs of ShapeDtypeStructs for the step function of this cell."""
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    policy = policy or make_policy(mesh, multi_pod=multi_pod)
+    opt = adamw.AdamWConfig(state_dtype=None)
+
+    if shape.kind == "train":
+        return {
+            "params": param_sds(cfg, mesh, policy),
+            "opt_state": opt_sds(cfg, mesh, policy),
+            "batch": batch_sds(cfg, shape, mesh, policy, with_labels=True),
+        }
+    if shape.kind == "prefill":
+        return {
+            "params": param_sds(cfg, mesh, policy),
+            "batch": batch_sds(cfg, shape, mesh, policy, with_labels=False),
+        }
+    b = _batch_axes(policy, shape.batch)
+    return {
+        "params": param_sds(cfg, mesh, policy),
+        "cache": cache_sds(cfg, shape, mesh, policy),
+        "token": _sds((shape.batch,), jnp.int32, mesh, P(b)),
+        "pos": _sds((), jnp.int32, mesh, P()),
+    }

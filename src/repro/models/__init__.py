@@ -1,0 +1,2 @@
+from repro.models.config import ModelConfig, reduced
+from repro.models import model

@@ -1,0 +1,343 @@
+"""Mixer blocks (attention / RG-LRU / Mamba-1) and residual block assembly.
+
+Every mixer implements the same contract:
+
+  init(cfg, key) -> params        specs(cfg) -> logical-spec pytree
+  cache(cfg, B)  -> zero state    apply(cfg, p, x, policy, mode, cache, pos)
+                                   -> (y, new_cache)
+
+`mode` is "train" | "prefill" | "decode".  Train and prefill process a full
+(B, S, D) sequence (prefill additionally emits a filled cache); decode
+processes (B, 1, D) against the cache at scalar position `pos`.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import Policy
+
+# ---------------------------------------------------------------------------
+# causal depthwise temporal conv (shared by mamba / rglru)
+
+
+def causal_conv(u, w, b=None):
+    """u: (B, S, C), w: (W, C) depthwise causal conv along S."""
+    W = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    y = sum(pad[:, j:j + u.shape[1], :] * w[j] for j in range(W))
+    return y + b if b is not None else y
+
+
+def conv_step(state, u1, w, b=None):
+    """state: (B, W-1, C); u1: (B, 1, C) -> (y1, new_state)."""
+    full = jnp.concatenate([state, u1], axis=1)            # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", full, w)[:, None]
+    if b is not None:
+        y = y + b
+    return y, full[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# chunked associative linear recurrence: h_t = a_t * h_{t-1} + b_t
+
+
+def _combine(x, y):
+    a1, b1 = x
+    a2, b2 = y
+    return a1 * a2, a2 * b1 + b2
+
+
+def linear_recurrence(a, b, h0, chunk=256):
+    """a, b: (B, S, ...) fp32; h0: (B, ...).  Returns (h_all (B,S,...), h_last).
+
+    Scans over S in chunks; within a chunk uses an associative scan, so peak
+    memory is O(B * chunk * state) instead of O(B * S * state)."""
+    B, S = a.shape[0], a.shape[1]
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
+                    constant_values=1.0)
+        b = jnp.pad(b, [(0, 0), (0, pad)] + [(0, 0)] * (b.ndim - 2))
+    ac = jnp.moveaxis(a.reshape((B, nc, chunk) + a.shape[2:]), 1, 0)
+    bc = jnp.moveaxis(b.reshape((B, nc, chunk) + b.shape[2:]), 1, 0)
+
+    def step(h, xs):
+        aj, bj = xs                                         # (B, chunk, ...)
+        a_sc, b_sc = jax.lax.associative_scan(_combine, (aj, bj), axis=1)
+        hj = a_sc * h[:, None] + b_sc
+        return hj[:, -1], hj
+
+    h_last, hs = jax.lax.scan(step, h0, (ac, bc))
+    hs = jnp.moveaxis(hs, 0, 1).reshape((B, nc * chunk) + a.shape[2:])
+    return hs[:, :S], h_last
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma recurrent block)
+
+_RG_C = 8.0
+
+
+def rglru_init(cfg, key):
+    D, R, W = cfg.d_model, cfg.lru_width, cfg.conv_width
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a = exp(-c*softplus(L)) lands in [0.9, 0.999]
+    u = jax.random.uniform(ks[4], (R,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _RG_C))  # softplus^-1(-log(u)/c)
+    return {
+        "w_x": L._dense_init(ks[0], (D, R), cfg.pdtype),
+        "w_g": L._dense_init(ks[1], (D, R), cfg.pdtype),
+        "conv_w": L._dense_init(ks[2], (W, R), cfg.pdtype, fan_in=W),
+        "conv_b": jnp.zeros((R,), cfg.pdtype),
+        "w_a": L._dense_init(ks[3], (R, R), cfg.pdtype),
+        "b_a": jnp.zeros((R,), cfg.pdtype),
+        "w_i": L._dense_init(ks[5], (R, R), cfg.pdtype),
+        "b_i": jnp.zeros((R,), cfg.pdtype),
+        "lam": lam,
+        "w_out": L._dense_init(jax.random.fold_in(key, 9), (R, D),
+                               cfg.pdtype, fan_in=R),
+    }
+
+
+def rglru_specs(cfg):
+    return {"w_x": ("fsdp", "tp"), "w_g": ("fsdp", "tp"),
+            "conv_w": (None, "tp"), "conv_b": ("tp",),
+            "w_a": ("fsdp", "tp"), "b_a": ("tp",),
+            "w_i": ("fsdp", "tp"), "b_i": ("tp",),
+            "lam": ("tp",), "w_out": ("tp", "fsdp")}
+
+
+def rglru_cache(cfg, batch):
+    R, W = cfg.lru_width, cfg.conv_width
+    return {"h": jnp.zeros((batch, R), jnp.float32),
+            "conv": jnp.zeros((batch, W - 1, R), jnp.float32)}
+
+
+def rglru_apply(cfg, p, x, policy: Policy, *, mode, cache=None, pos=None):
+    cd = cfg.cdtype
+    B, S, D = x.shape
+    xc = x.astype(cd)
+    if mode == "decode" and policy.enabled and policy.resident_decode:
+        from jax.sharding import PartitionSpec as P
+        xc = policy.constrain(xc, P(None, None, policy.fsdp))
+    u = jnp.einsum("bsd,dr->bsr", xc, p["w_x"].astype(cd))
+    g = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", xc, p["w_g"].astype(cd)))
+    u = policy.constrain(u, policy.batch(None, policy.tp))
+
+    new_cache = cache
+    if mode == "decode":
+        conv_out, conv_state = conv_step(cache["conv"],
+                                         u.astype(jnp.float32),
+                                         p["conv_w"].astype(jnp.float32),
+                                         p["conv_b"].astype(jnp.float32))
+        u32 = conv_out[:, None] if conv_out.ndim == 2 else conv_out
+    else:
+        u32 = causal_conv(u.astype(jnp.float32), p["conv_w"].astype(jnp.float32),
+                          p["conv_b"].astype(jnp.float32))
+        # conv state holds the last W-1 *pre-conv* inputs
+        conv_state = (u.astype(jnp.float32)[:, -(cfg.conv_width - 1):, :]
+                      if mode == "prefill" else None)
+
+    r = jax.nn.sigmoid(u32 @ p["w_a"].astype(jnp.float32) + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(u32 @ p["w_i"].astype(jnp.float32) + p["b_i"].astype(jnp.float32))
+    log_a = -_RG_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(-jnp.expm1(2.0 * log_a)) * (i * u32)
+
+    if mode == "decode":
+        h = a[:, 0] * cache["h"] + b[:, 0]
+        new_cache = {"h": h, "conv": conv_state}
+        hs = h[:, None]
+    else:
+        h0 = jnp.zeros((B, cfg.lru_width), jnp.float32)
+        hs, h_last = linear_recurrence(a, b, h0)
+        if mode == "prefill":
+            new_cache = {"h": h_last, "conv": conv_state}
+    hs = policy.constrain(hs, policy.batch(None, policy.tp))
+    y = jnp.einsum("bsr,rd->bsd", (hs.astype(cd) * g), p["w_out"].astype(cd))
+    return y.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 selective SSM
+
+
+def mamba_init(cfg, key):
+    D, Di, N, R, W = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.dt_rank, cfg.conv_width)
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (Di, 1))
+    return {
+        "in_proj": L._dense_init(ks[0], (D, 2 * Di), cfg.pdtype),
+        "conv_w": L._dense_init(ks[1], (W, Di), cfg.pdtype, fan_in=W),
+        "conv_b": jnp.zeros((Di,), cfg.pdtype),
+        "x_proj": L._dense_init(ks[2], (Di, R + 2 * N), cfg.pdtype),
+        "dt_proj": L._dense_init(ks[3], (R, Di), cfg.pdtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[4], (Di,), jnp.float32,
+                                        1e-3, 1e-1), 1e-4, None))),
+        "A_log": jnp.log(A),
+        "D_skip": jnp.ones((Di,), jnp.float32),
+        "out_proj": L._dense_init(ks[5], (Di, D), cfg.pdtype, fan_in=Di),
+    }
+
+
+def mamba_specs(cfg):
+    return {"in_proj": ("fsdp", "tp"), "conv_w": (None, "tp"),
+            "conv_b": ("tp",), "x_proj": ("tp", "fsdp"),
+            "dt_proj": ("fsdp", "tp"), "dt_bias": ("tp",),
+            "A_log": ("tp", None), "D_skip": ("tp",),
+            "out_proj": ("tp", "fsdp")}
+
+
+def mamba_cache(cfg, batch):
+    Di, N, W = cfg.d_inner, cfg.ssm_state, cfg.conv_width
+    return {"h": jnp.zeros((batch, Di, N), jnp.float32),
+            "conv": jnp.zeros((batch, W - 1, Di), jnp.float32)}
+
+
+def mamba_apply(cfg, p, x, policy: Policy, *, mode, cache=None, pos=None):
+    cd = cfg.cdtype
+    B, S, D = x.shape
+    Di, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xc = x.astype(cd)
+    if mode == "decode" and policy.enabled and policy.resident_decode:
+        from jax.sharding import PartitionSpec as P
+        xc = policy.constrain(xc, P(None, None, policy.fsdp))
+    xz = jnp.einsum("bsd,de->bse", xc, p["in_proj"].astype(cd))
+    u, z = jnp.split(xz, 2, axis=-1)
+    u = policy.constrain(u, policy.batch(None, policy.tp))
+
+    new_cache = cache
+    if mode == "decode":
+        u1, conv_state = conv_step(cache["conv"], u.astype(jnp.float32),
+                                   p["conv_w"].astype(jnp.float32),
+                                   p["conv_b"].astype(jnp.float32))
+        u32 = jax.nn.silu(u1[:, None] if u1.ndim == 2 else u1)
+    else:
+        u32 = jax.nn.silu(causal_conv(u.astype(jnp.float32),
+                                      p["conv_w"].astype(jnp.float32),
+                                      p["conv_b"].astype(jnp.float32)))
+        # conv state holds the last W-1 *pre-conv* inputs
+        conv_state = (u.astype(jnp.float32)[:, -(cfg.conv_width - 1):, :]
+                      if mode == "prefill" else None)
+
+    dbc = u32 @ p["x_proj"].astype(jnp.float32)
+    dt_r, Bm, Cm = jnp.split(dbc, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                   # (Di, N)
+    decay = jnp.exp(dt[..., None] * A)                         # (B,S,Di,N)
+    inp = (dt * u32)[..., None] * Bm[..., None, :]             # (B,S,Di,N)
+
+    if mode == "decode":
+        h = decay[:, 0] * cache["h"] + inp[:, 0]
+        new_cache = {"h": h, "conv": conv_state}
+        hs = h[:, None]
+    elif cfg.ssm_impl == "noscan":
+        # measurement-only variant (§Perf traffic isolation): identity
+        # recurrence with identical tensor I/O — the dry-run diff against
+        # "assoc" attributes HBM traffic to the scan itself
+        hs, h_last = inp, inp[:, -1]
+        if mode == "prefill":
+            new_cache = {"h": h_last, "conv": conv_state}
+    else:
+        sdt = jnp.bfloat16 if cfg.ssm_scan_dtype == "bfloat16" \
+            else jnp.float32
+        h0 = jnp.zeros((B, Di, N), sdt)
+        hs, h_last = linear_recurrence(decay.astype(sdt), inp.astype(sdt),
+                                       h0, chunk=min(cfg.ssm_chunk,
+                                                     max(16, S)))
+        hs, h_last = hs.astype(jnp.float32), h_last.astype(jnp.float32)
+        if mode == "prefill":
+            new_cache = {"h": h_last, "conv": conv_state}
+
+    y = jnp.einsum("bsdn,bsn->bsd", hs, Cm) + p["D_skip"] * u32
+    y = policy.constrain(y.astype(cd), policy.batch(None, policy.tp))
+    out = jnp.einsum("bse,ed->bsd", y * jax.nn.silu(z), p["out_proj"].astype(cd))
+    return out.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Block assembly: pre-norm residual (mixer, mlp) pairs
+
+
+MIXERS = {
+    "attn_g": (L.attn_init, L.attn_specs),
+    "attn_l": (L.attn_init, L.attn_specs),
+    "rglru": (rglru_init, rglru_specs),
+    "mamba": (mamba_init, mamba_specs),
+}
+
+
+def block_init(cfg, entry, key):
+    mixer, mlp = cfg.entry(entry)
+    ks = jax.random.split(key, 2)
+    init, _ = MIXERS[mixer]
+    p = {"norm1": L.rmsnorm_init(cfg), "mixer": init(cfg, ks[0])}
+    if mlp == "dense":
+        p["norm2"] = L.rmsnorm_init(cfg)
+        d_ff = cfg.d_ff
+        p["mlp"] = L.mlp_init(cfg, ks[1], d_ff=d_ff)
+    elif mlp == "moe":
+        p["norm2"] = L.rmsnorm_init(cfg)
+        p["mlp"] = L.moe_init(cfg, ks[1])
+    return p
+
+
+def block_specs(cfg, entry):
+    mixer, mlp = cfg.entry(entry)
+    _, specs = MIXERS[mixer]
+    s = {"norm1": L.rmsnorm_specs(cfg), "mixer": specs(cfg)}
+    if mlp == "dense":
+        s["norm2"] = L.rmsnorm_specs(cfg)
+        s["mlp"] = L.mlp_specs(cfg)
+    elif mlp == "moe":
+        s["norm2"] = L.rmsnorm_specs(cfg)
+        s["mlp"] = L.moe_specs(cfg)
+    return s
+
+
+def block_cache(cfg, entry, batch, max_seq):
+    """Zero cache for one block.  Local-attn caches are window-sized."""
+    mixer, _ = cfg.entry(entry)
+    if mixer == "attn_g":
+        return L.attn_cache_shape(cfg, batch, max_seq)
+    if mixer == "attn_l":
+        return L.attn_cache_shape(cfg, batch, min(max_seq, cfg.window))
+    if mixer == "rglru":
+        return rglru_cache(cfg, batch)
+    if mixer == "mamba":
+        return mamba_cache(cfg, batch)
+    raise ValueError(mixer)
+
+
+def block_apply(cfg, entry, p, x, policy: Policy, *, mode, cache=None,
+                pos=None):
+    mixer, mlp = cfg.entry(entry)
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if mixer in ("attn_g", "attn_l"):
+        window = cfg.window if mixer == "attn_l" else 0
+        y, new_cache = L.attn_apply(cfg, p["mixer"], h, policy, mode=mode,
+                                    window=window, cache=cache, pos=pos)
+    elif mixer == "rglru":
+        y, new_cache = rglru_apply(cfg, p["mixer"], h, policy, mode=mode,
+                                   cache=cache, pos=pos)
+    else:
+        y, new_cache = mamba_apply(cfg, p["mixer"], h, policy, mode=mode,
+                                   cache=cache, pos=pos)
+    x = x + y
+    if mlp != "none":
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if mlp == "dense":
+            x = x + L.mlp_apply(cfg, p["mlp"], h2, policy,
+                                decode=(mode == "decode"))
+        else:
+            x = x + L.moe_apply(cfg, p["mlp"], h2, policy,
+                                decode=(mode == "decode"))
+    return x, new_cache

@@ -1,0 +1,555 @@
+"""Core layers: RMSNorm, RoPE, GQA attention (dense + online-softmax paths),
+dense/gated MLP, and sort-based MoE MLP with capacity dropping.
+
+All functions are pure; parameters are dicts of arrays.  Logical sharding
+specs live beside each init in ``*_specs`` (trailing-dim tuples consumed by
+``repro.sharding.logical_to_spec``).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import Policy
+
+# ---------------------------------------------------------------------------
+# initializers
+
+
+def _dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+
+
+def rmsnorm_init(cfg, dim=None):
+    return {"scale": jnp.ones((dim or cfg.d_model,), cfg.pdtype)}
+
+
+def rmsnorm_specs(cfg, dim=None):
+    return {"scale": ()}
+
+
+def rmsnorm(p, x, eps):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope(x, positions, theta):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional sliding window, optional qk-norm)
+
+
+def attn_init(cfg, key):
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (D, H * hd), cfg.pdtype),
+        "wk": _dense_init(ks[1], (D, KV * hd), cfg.pdtype),
+        "wv": _dense_init(ks[2], (D, KV * hd), cfg.pdtype),
+        "wo": _dense_init(ks[3], (H * hd, D), cfg.pdtype, fan_in=H * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), cfg.pdtype)
+        p["bk"] = jnp.zeros((KV * hd,), cfg.pdtype)
+        p["bv"] = jnp.zeros((KV * hd,), cfg.pdtype)
+    if cfg.o_bias:
+        p["bo"] = jnp.zeros((D,), cfg.pdtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), cfg.pdtype)
+        p["k_norm"] = jnp.ones((hd,), cfg.pdtype)
+    return p
+
+
+def attn_specs(cfg):
+    s = {"wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+         "wo": ("tp", "fsdp")}
+    if cfg.qkv_bias:
+        s.update({"bq": ("tp",), "bk": ("tp",), "bv": ("tp",)})
+    if cfg.o_bias:
+        s["bo"] = ()
+    if cfg.qk_norm:
+        s.update({"q_norm": (), "k_norm": ()})
+    return s
+
+
+def _qk_normalize(q, k, p, eps):
+    def nrm(x, scale):
+        x32 = x.astype(jnp.float32)
+        y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+        return (y * scale.astype(jnp.float32)).astype(x.dtype)
+    return nrm(q, p["q_norm"]), nrm(k, p["k_norm"])
+
+
+def _mask(q_pos, k_pos, window):
+    """(..., S, T) boolean validity mask. q_pos/k_pos broadcastable int32."""
+    m = (k_pos[..., None, :] <= q_pos[..., :, None]) & (k_pos[..., None, :] >= 0)
+    if window:
+        m &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    return m
+
+
+def _attn_dense(q, k, v, q_pos, k_pos, window, causal=True):
+    """q: (B,S,KV,G,hd)  k,v: (B,T,KV,hd).  Returns (B,S,KV,G,hd)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bskgh,btkh->bkgst", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        valid = _mask(q_pos, k_pos, window)          # (B?,S,T) or (S,T)
+        valid = valid[..., None, None, :, :] if valid.ndim == 3 else valid
+        s = jnp.where(valid, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkh->bskgh", w.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def _attn_online(q, k, v, q_pos, k_pos, window, causal=True, blk=1024):
+    """Online-softmax (flash-style) attention scanned over KV blocks.
+
+    Never materialises the full (S, T) score matrix: peak live memory is
+    (B, KV, G, S, blk).  This is the XLA fallback for the Pallas kernel.
+    """
+    B, S, KV, G, hd = q.shape
+    T = k.shape[1]
+    nblk = (T + blk - 1) // blk
+    Tp = nblk * blk
+    if Tp != T:
+        pad = [(0, 0), (0, Tp - T), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        k_pos = jnp.pad(k_pos, ((0, Tp - T),), constant_values=jnp.iinfo(jnp.int32).max)
+    scale = 1.0 / math.sqrt(hd)
+    kb = k.reshape(B, nblk, blk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, blk, KV, hd).transpose(1, 0, 2, 3, 4)
+    pb = k_pos.reshape(nblk, blk)
+
+    def step(carry, xs):
+        m, d, acc = carry
+        kj, vj, pj = xs
+        s = jnp.einsum("bskgh,btkh->bkgst", q, kj,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            valid = _mask(q_pos, pj, window)  # (S, blk)
+            s = jnp.where(valid[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        d = d * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgst,btkh->bkgsh", p.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, d, acc), None
+
+    m0 = jnp.full((B, KV, G, S), -jnp.inf, jnp.float32)
+    d0 = jnp.zeros((B, KV, G, S), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, S, hd), jnp.float32)
+    (m, d, acc), _ = jax.lax.scan(step, (m0, d0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(d, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,S,KV,G,hd)
+
+
+def attn_apply(cfg, p, x, policy: Policy, *, mode, window,
+               cache=None, pos=None):
+    """Full attention layer.  mode: train|prefill|decode.
+
+    cache (decode / prefill output): {"k","v"}: (B, S_max, KV, hd).
+    pos: scalar int32 decode position (k/v written at `pos`).
+    Returns (y, new_cache).
+    """
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KV
+    cd = cfg.cdtype
+    xq = x.astype(cd)
+    resident = (mode == "decode" and policy.enabled
+                and policy.resident_decode)
+    if resident:
+        from jax.sharding import PartitionSpec as P
+        xq = policy.constrain(xq, P(None, None, policy.fsdp))
+
+    def proj(w, b=None):
+        y = jnp.einsum("bsd,df->bsf", xq, p[w].astype(cd))
+        if b and b in p:
+            y = y + p[b].astype(cd)
+        return y
+
+    q = proj("wq", "bq").reshape(B, S, H, hd)
+    k = proj("wk", "bk").reshape(B, S, KV, hd)
+    v = proj("wv", "bv").reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q, k = _qk_normalize(q, k, p, cfg.norm_eps)
+
+    if mode == "decode":
+        if jnp.ndim(pos) == 1:          # per-sequence positions (serving)
+            q_pos = pos[:, None].astype(jnp.int32)          # (B, 1)
+        else:
+            q_pos = pos + jnp.zeros((1,), jnp.int32)        # (1,)
+        k_pos_new = q_pos
+    else:
+        q_pos = jnp.arange(S, dtype=jnp.int32)
+        k_pos_new = q_pos
+    q = rope(q, q_pos, cfg.rope_theta)
+    k = rope(k, k_pos_new, cfg.rope_theta)
+
+    # -- sharding of attention intermediates --------------------------------
+    head_sharded = policy.shard_heads(H, KV)
+    if head_sharded:
+        q = policy.constrain(q, policy.batch(None, policy.tp, None))
+        k = policy.constrain(k, policy.batch(None, policy.tp, None))
+        v = policy.constrain(v, policy.batch(None, policy.tp, None))
+    elif mode != "decode":
+        # sequence-parallel queries, replicated kv
+        q = policy.constrain(q, policy.batch(policy.tp, None, None))
+        k = policy.constrain(k, policy.batch(None, None, None))
+        v = policy.constrain(v, policy.batch(None, None, None))
+
+    new_cache = cache
+    if mode == "decode":
+        assert cache is not None
+        W = cache["k"].shape[1]
+        spec = policy.cache_spec(B, hd)
+        vec_pos = jnp.ndim(pos) == 1
+        if window and W == min(window, W):
+            # rolling window cache: slots always hold the last W positions.
+            # Sharded on batch only — a seq-sharded rolling shift would
+            # cross shard boundaries every step (measured: the dominant
+            # decode collective for local-attention archs, §Perf C3).
+            spec = (jax.sharding.PartitionSpec(policy.dp, None, None, None)
+                    if policy.enabled and B % max(1, policy.dp_size()) == 0
+                    else policy.cache_spec(B, hd))
+            k_all = jnp.concatenate([cache["k"][:, 1:],
+                                     k.astype(cache["k"].dtype)], axis=1)
+            v_all = jnp.concatenate([cache["v"][:, 1:],
+                                     v.astype(cache["v"].dtype)], axis=1)
+            rel = jnp.arange(W, dtype=jnp.int32) - (W - 1)
+            k_pos = (pos[:, None] + rel[None, :]) if vec_pos else pos + rel
+        elif vec_pos:
+            # per-sequence write positions (serving engine): scatter rows
+            bidx = jnp.arange(B)
+            k_all = cache["k"].at[bidx, pos].set(
+                k[:, 0].astype(cache["k"].dtype))
+            v_all = cache["v"].at[bidx, pos].set(
+                v[:, 0].astype(cache["v"].dtype))
+            k_pos = jnp.broadcast_to(
+                jnp.arange(k_all.shape[1], dtype=jnp.int32),
+                (B, k_all.shape[1]))
+        else:
+            k_all = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            v_all = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            k_pos = jnp.arange(k_all.shape[1], dtype=jnp.int32)
+        k_all = policy.constrain(k_all, spec)
+        v_all = policy.constrain(v_all, spec)
+        new_cache = {"k": k_all, "v": v_all}
+        qg = q.reshape(B, S, KV, G, hd)
+        o = _attn_dense(qg, k_all.astype(cd), v_all.astype(cd),
+                        q_pos, k_pos, window)
+    else:
+        qg = q.reshape(B, S, KV, G, hd)
+        if mode == "prefill":
+            kc, vc = k.astype(cfg.cdtype), v.astype(cfg.cdtype)
+            if window and S >= window:
+                kc, vc = kc[:, -window:], vc[:, -window:]
+            spec = policy.cache_spec(B, hd)
+            new_cache = {"k": policy.constrain(kc, spec),
+                         "v": policy.constrain(vc, spec)}
+        if cfg.attn_impl == "iso":
+            # measurement-only (§Perf): same I/O shapes, no (S,T) score
+            # materialization — isolates non-attention traffic; combined
+            # with the flash-kernel traffic model in EXPERIMENTS.md §Perf
+            kv_ = jnp.einsum("btkh,btkg->bkhg", k, v,
+                             preferred_element_type=jnp.float32)
+            o = jnp.einsum("bskgh,bkhj->bskgj", qg,
+                           kv_.astype(cd)) / max(1, k.shape[1])
+        elif cfg.causal:
+            fn = _attn_dense if S <= 2048 else _attn_online
+            o = fn(qg, k, v, q_pos, k_pos_new, window)
+        else:  # bidirectional encoder
+            if S <= 2048:
+                o = _attn_dense(qg, k, v, q_pos, k_pos_new, 0, causal=False)
+            else:
+                o = _attn_online(qg, k, v, q_pos, k_pos_new, 0, causal=False)
+
+    o = o.reshape(B, S, H * hd)
+    if resident:
+        from jax.sharding import PartitionSpec as P
+        o = policy.constrain(o, P(None, None,
+                                  policy.maybe(policy.tp, H * hd)))
+    elif head_sharded:
+        o = policy.constrain(o, policy.batch(None, policy.tp))
+    y = jnp.einsum("bsf,fd->bsd", o, p["wo"].astype(cd))
+    if "bo" in p:
+        y = y + p["bo"].astype(cd)
+    return y.astype(x.dtype), new_cache
+
+
+def attn_cache_shape(cfg, batch, max_seq):
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    z = jnp.zeros  # caller may eval_shape this
+    return {"k": z((batch, max_seq, KV, hd), cfg.cdtype),
+            "v": z((batch, max_seq, KV, hd), cfg.cdtype)}
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (gated or plain)
+
+
+def mlp_init(cfg, key, d_ff=None):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_out": _dense_init(ks[2], (F, D), cfg.pdtype, fan_in=F)}
+    p["w_in"] = _dense_init(ks[0], (D, F), cfg.pdtype)
+    if cfg.gated_mlp:
+        p["w_gate"] = _dense_init(ks[1], (D, F), cfg.pdtype)
+    if cfg.mlp_bias:
+        p["b_in"] = jnp.zeros((F,), cfg.pdtype)
+        p["b_out"] = jnp.zeros((D,), cfg.pdtype)
+    return p
+
+
+def mlp_specs(cfg):
+    s = {"w_in": ("fsdp", "tp"), "w_out": ("tp", "fsdp")}
+    if cfg.gated_mlp:
+        s["w_gate"] = ("fsdp", "tp")
+    if cfg.mlp_bias:
+        s.update({"b_in": ("tp",), "b_out": ()})
+    return s
+
+
+def _act(name):
+    return {"silu": jax.nn.silu, "gelu": partial(jax.nn.gelu, approximate=True)}[name]
+
+
+def mlp_apply(cfg, p, x, policy: Policy, decode: bool = False):
+    from jax.sharding import PartitionSpec as P
+    cd = cfg.cdtype
+    xc = x.astype(cd)
+    if decode and policy.enabled and policy.resident_decode:
+        # slice D over fsdp: the einsum partial-sums against the resident
+        # weight shard; no weight all-gather per decode step
+        xc = policy.constrain(xc, P(None, None, policy.fsdp))
+    h = jnp.einsum("bsd,df->bsf", xc, p["w_in"].astype(cd))
+    if "b_in" in p:
+        h = h + p["b_in"].astype(cd)
+    if cfg.gated_mlp:
+        g = jnp.einsum("bsd,df->bsf", xc, p["w_gate"].astype(cd))
+        h = _act(cfg.activation)(g) * h
+    else:
+        h = _act(cfg.activation)(h)
+    if decode and policy.enabled and policy.resident_decode:
+        h = policy.constrain(h, P(None, None, policy.tp))
+    else:
+        h = policy.constrain(h, policy.batch(None, policy.tp))
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(cd))
+    if "b_out" in p:
+        y = y + p["b_out"].astype(cd)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE MLP — sort-based dispatch with capacity dropping (GShard-style),
+# experts sharded on the tp axis.  This is exactly Beehive's flow-affine
+# scale-out dispatch: tokens are "flows", experts are replicated stateful
+# tiles, and the capacity limit is the paper's per-tile queue.
+
+
+def moe_init(cfg, key):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (D, E), jnp.float32),
+        "w_in": _dense_init(ks[1], (E, D, F), cfg.pdtype, fan_in=D),
+        "w_gate": _dense_init(ks[2], (E, D, F), cfg.pdtype, fan_in=D),
+        "w_out": _dense_init(ks[3], (E, F, D), cfg.pdtype, fan_in=F),
+    }
+    if cfg.shared_expert:
+        p["shared"] = mlp_init(cfg, ks[4], d_ff=cfg.d_ff_expert)
+    return p
+
+
+def moe_specs(cfg):
+    if cfg.moe_shard_ff:
+        # resident experts: FFN dim sharded on fsdp; never gathered
+        s = {
+            "router": (),
+            "w_in": ("tp", None, "fsdp"),
+            "w_gate": ("tp", None, "fsdp"),
+            "w_out": ("tp", "fsdp", None),
+        }
+    else:
+        s = {
+            "router": (),
+            "w_in": ("tp", "fsdp", None),
+            "w_gate": ("tp", "fsdp", None),
+            "w_out": ("tp", None, "fsdp"),
+        }
+    if cfg.shared_expert:
+        s["shared"] = mlp_specs(cfg)
+    return s
+
+
+def moe_capacity(cfg, n_tokens):
+    c = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(128, ((c + 127) // 128) * 128)
+
+
+def moe_apply(cfg, p, x, policy: Policy, decode: bool = False):
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    C = moe_capacity(cfg, T)
+    cd = cfg.cdtype
+
+    xt = x.reshape(T, D)
+    xt = policy.constrain(xt, P_tokens(policy))
+    logits = (xt.astype(jnp.float32) @ p["router"])            # (T, E)
+    if cfg.router == "sigmoid":
+        gates = jax.nn.sigmoid(logits)
+        gate_w, eidx = jax.lax.top_k(gates, K)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_w, eidx = jax.lax.top_k(probs, K)
+        gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = eidx.reshape(-1)                                   # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    flat_g = gate_w.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts                        # exclusive
+    rank = jnp.arange(T * K, dtype=jnp.int32) - starts[se]
+    slot = jnp.where(rank < C, se * C + rank, E * C)            # drop overflow
+    # token index per (expert, capacity) slot; E*C -> sentinel row
+    token_of = jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(st)[:-1]
+    gate_of = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(sg)[:-1]
+
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, D), xt.dtype)], 0)
+    # expert dim on tp, capacity dim on dp: each device computes its experts'
+    # share of the capacity (this is Beehive's flow-affine dispatch, with
+    # per-tile queue depth C/dp_size)
+    from jax.sharding import PartitionSpec as P
+    if decode and policy.enabled:
+        # decode has few tokens: keep weights resident (no FSDP gather) by
+        # slicing the contraction dim on the fsdp axis; XLA partial-sums and
+        # all-reduces the small (E, C, F) activations instead
+        ec_spec = P(policy.tp, None, policy.fsdp)
+        h_spec = ye_spec = None
+    elif cfg.moe_shard_ff and policy.enabled:
+        # resident experts (§Perf): full capacity per device, FFN dim
+        # sharded on fsdp — trades the per-layer weight all-gather for a
+        # (E, C, D) activation all-reduce
+        ec_spec = P(policy.tp, None, None)
+        h_spec = P(policy.tp, None, policy.fsdp)
+        ye_spec = P(policy.tp, None, None)
+    else:
+        ec_spec = (P(policy.tp, policy.dp, None) if policy.enabled else P())
+        h_spec = ye_spec = ec_spec
+    xe = xt_pad[token_of].reshape(E, C, D).astype(cd)           # (E, C, D)
+    xe = policy.constrain(xe, ec_spec)
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w_in"].astype(cd))
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(cd))
+    h = _act(cfg.activation)(g) * h
+    if h_spec is not None:
+        h = policy.constrain(h, h_spec)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(cd))
+    if ye_spec is not None:
+        ye = policy.constrain(ye, ye_spec)
+    ye = ye * gate_of.reshape(E, C, 1).astype(cd)
+
+    out = jnp.zeros((T + 1, D), jnp.float32)
+    out = out.at[token_of.reshape(-1)].add(ye.reshape(E * C, D).astype(jnp.float32))
+    out = out[:T]
+    out = policy.constrain(out, P_tokens(policy))
+    y = out.reshape(B, S, D).astype(x.dtype)
+    if cfg.shared_expert:
+        y = y + mlp_apply(cfg, p["shared"], x, policy)
+    return y
+
+
+def P_tokens(policy: Policy):
+    from jax.sharding import PartitionSpec as P
+    return P(policy.dp if policy.dp else None, None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+
+
+def embed_init(cfg, key):
+    p = {"table": _dense_init(key, (cfg.v_pad, cfg.d_model), cfg.pdtype,
+                              fan_in=cfg.d_model)}
+    if not cfg.tie_embeddings:
+        p["head"] = _dense_init(jax.random.fold_in(key, 1),
+                                (cfg.d_model, cfg.v_pad), cfg.pdtype)
+    return p
+
+
+def embed_specs(cfg):
+    s = {"table": ("tp", "fsdp")}
+    if not cfg.tie_embeddings:
+        s["head"] = ("fsdp", "tp")
+    return s
+
+
+def embed_apply(cfg, p, tokens, policy: Policy):
+    # one-hot free gather; table vocab-sharded on tp => XLA partitions gather
+    h = jnp.take(p["table"], tokens, axis=0).astype(cfg.cdtype)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
+    return policy.constrain(h, policy.batch(None, None))
+
+
+def lm_head(cfg, p, h, policy: Policy):
+    cd = cfg.cdtype
+    w = p["table"].astype(cd).T if cfg.tie_embeddings else p["head"].astype(cd)
+    logits = jnp.einsum("bsd,dv->bsv", h.astype(cd), w)
+    return policy.constrain(logits, policy.batch(None, policy.tp))
+
+
+def cross_entropy(cfg, logits, labels, policy: Policy):
+    """Next-token CE over a vocab-sharded (padded) logits tensor.
+
+    Uses select+reduce (fusable) instead of materialising a one-hot, and
+    masks out the padded vocab tail.  labels < 0 are ignored.
+    """
+    V = logits.shape[-1]
+    l32 = logits.astype(jnp.float32)
+    iota = jnp.arange(V, dtype=jnp.int32)
+    if cfg.v_pad != cfg.vocab:
+        l32 = jnp.where(iota < cfg.vocab, l32, -1e30)
+    lse = jax.nn.logsumexp(l32, axis=-1)
+    picked = jnp.sum(jnp.where(iota == labels[..., None], l32, 0.0), axis=-1)
+    nll = lse - picked
+    valid = labels >= 0
+    return jnp.sum(jnp.where(valid, nll, 0.0)) / jnp.maximum(valid.sum(), 1)

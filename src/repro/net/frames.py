@@ -1,0 +1,93 @@
+"""numpy-side golden frame builders — the 'unmodified Linux client'.
+
+Benchmarks and tests build wire-format Ethernet/IPv4/UDP/TCP frames here
+(host side) and feed them to the JAX stack, proving standard-protocol
+interop without touching the device path.
+"""
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from repro.net.bytesops import np_checksum16
+
+
+def eth_frame(dst_mac: bytes, src_mac: bytes, ethertype: int,
+              payload: bytes, vlan: int = None) -> bytes:
+    if vlan is None:
+        return dst_mac + src_mac + struct.pack("!H", ethertype) + payload
+    return (dst_mac + src_mac + struct.pack("!HH", 0x8100, vlan)
+            + struct.pack("!H", ethertype) + payload)
+
+
+def ipv4_packet(src_ip: int, dst_ip: int, proto: int, payload: bytes,
+                ttl: int = 64, ident: int = 0) -> bytes:
+    total = 20 + len(payload)
+    hdr = struct.pack("!BBHHHBBH", 0x45, 0, total, ident, 0x4000, ttl,
+                      proto, 0) + struct.pack("!II", src_ip, dst_ip)
+    csum = np_checksum16(hdr)
+    hdr = hdr[:10] + struct.pack("!H", csum) + hdr[12:]
+    return hdr + payload
+
+
+def udp_datagram(src_ip: int, dst_ip: int, src_port: int, dst_port: int,
+                 payload: bytes, with_checksum: bool = True) -> bytes:
+    ulen = 8 + len(payload)
+    hdr = struct.pack("!HHHH", src_port, dst_port, ulen, 0)
+    if with_checksum:
+        pseudo = struct.pack("!IIBBH", src_ip, dst_ip, 0, 17, ulen)
+        csum = np_checksum16(pseudo + hdr + payload)
+        csum = csum or 0xFFFF
+        hdr = hdr[:6] + struct.pack("!H", csum)
+    return hdr + payload
+
+
+TCP_FIN, TCP_SYN, TCP_RST, TCP_PSH, TCP_ACK = 0x01, 0x02, 0x04, 0x08, 0x10
+
+
+def tcp_segment(src_ip: int, dst_ip: int, src_port: int, dst_port: int,
+                seq: int, ack: int, flags: int, payload: bytes = b"",
+                window: int = 65535) -> bytes:
+    hdr = struct.pack("!HHIIBBHHH", src_port, dst_port, seq & 0xFFFFFFFF,
+                      ack & 0xFFFFFFFF, 5 << 4, flags, window, 0, 0)
+    tlen = len(hdr) + len(payload)
+    pseudo = struct.pack("!IIBBH", src_ip, dst_ip, 0, 6, tlen)
+    csum = np_checksum16(pseudo + hdr + payload)
+    hdr = hdr[:16] + struct.pack("!H", csum) + hdr[18:]
+    return hdr + payload
+
+
+def udp_rpc_frame(src_ip, dst_ip, src_port, dst_port, payload: bytes,
+                  dst_mac=b"\x02\x00\x00\x00\x00\x01",
+                  src_mac=b"\x02\x00\x00\x00\x00\x02",
+                  vlan=None) -> bytes:
+    dgram = udp_datagram(src_ip, dst_ip, src_port, dst_port, payload)
+    pkt = ipv4_packet(src_ip, dst_ip, 17, dgram)
+    return eth_frame(dst_mac, src_mac, 0x0800, pkt, vlan=vlan)
+
+
+def tcp_eth_frame(src_ip, dst_ip, src_port, dst_port, seq, ack, flags,
+                  payload: bytes = b"", window: int = 65535,
+                  dst_mac=b"\x02\x00\x00\x00\x00\x01",
+                  src_mac=b"\x02\x00\x00\x00\x00\x02") -> bytes:
+    seg = tcp_segment(src_ip, dst_ip, src_port, dst_port, seq, ack, flags,
+                      payload, window)
+    pkt = ipv4_packet(src_ip, dst_ip, 6, seg)
+    return eth_frame(dst_mac, src_mac, 0x0800, pkt)
+
+
+def to_batch(frames, max_len: int = 512):
+    """Pack a list of byte strings into (B, L) uint8 + lengths."""
+    B = len(frames)
+    payload = np.zeros((B, max_len), np.uint8)
+    length = np.zeros((B,), np.int32)
+    for i, f in enumerate(frames):
+        payload[i, :len(f)] = np.frombuffer(f, np.uint8)
+        length[i] = len(f)
+    return payload, length
+
+
+def ip(a: str) -> int:
+    parts = [int(x) for x in a.split(".")]
+    return (parts[0] << 24) | (parts[1] << 16) | (parts[2] << 8) | parts[3]

@@ -1,0 +1,33 @@
+"""IP-in-IP encapsulation tile (paper §4.5) — the other network-
+virtualization option.  Encap prepends an outer IPv4 header addressed to
+the physical host; decap strips it.  Decap requires a *second* IP tile
+downstream (duplicated tiles break the repeated-header resource-ordering
+problem, paper §3.5 — tests/test_core.py reproduces the analysis).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.net import bytesops as B
+from repro.net import ipv4
+
+PROTO_IPIP = 4
+
+
+def encap(payload, length, meta: Dict, outer_src, outer_dst):
+    """Wrap the current (inner IP) packet in an outer IPv4 header."""
+    m = {"ip_proto": jnp.full_like(meta["src_ip"], PROTO_IPIP),
+         "src_ip": jnp.broadcast_to(jnp.uint32(outer_src), meta["src_ip"].shape)
+         if not hasattr(outer_src, "shape") else outer_src,
+         "dst_ip": jnp.broadcast_to(jnp.uint32(outer_dst), meta["dst_ip"].shape)
+         if not hasattr(outer_dst, "shape") else outer_dst}
+    return ipv4.build(payload, length, m)
+
+
+def decap(payload, length, meta: Dict):
+    """Strip the outer header (we are already past the outer IP tile, so
+    the payload *is* the inner IP packet); just sanity-check the proto."""
+    ok = meta["ip_proto"] == PROTO_IPIP
+    return payload, length, ok

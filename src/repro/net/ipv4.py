@@ -1,0 +1,50 @@
+"""IPv4 tile: parse + checksum verify on RX, build + checksum on TX.
+No fragmentation support — internal datacenter services (paper §4.2)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.net import bytesops as B
+
+IP_HLEN = 20          # options unsupported (ihl=5), like the paper's tile
+PROTO_TCP = 6
+PROTO_UDP = 17
+
+
+def parse(payload, length):
+    """Returns (stripped, new_length, meta, ok).  ok=False -> drop."""
+    ver_ihl = B.u8(payload, 0)
+    version = ver_ihl >> 4
+    ihl = (ver_ihl & 0xF).astype(jnp.int32) * 4
+    total_len = B.be16(payload, 2)
+    ttl = B.u8(payload, 8)
+    proto = B.u8(payload, 9)
+    src_ip = B.be32(payload, 12)
+    dst_ip = B.be32(payload, 16)
+    csum = B.checksum16(payload, 0, ihl)   # over header; valid iff == 0
+    ok = (version == 4) & (csum == 0) & (ttl > 0) & \
+         (total_len.astype(jnp.int32) <= length)
+    stripped = B.shift_left(payload, ihl)
+    meta = {"ip_proto": proto, "src_ip": src_ip, "dst_ip": dst_ip,
+            "ip_ttl": ttl, "ip_total_len": total_len}
+    return stripped, total_len.astype(jnp.int32) - ihl, meta, ok
+
+
+def build(payload, length, meta, ident=None):
+    """Prepend a 20-byte IPv4 header with computed checksum."""
+    out = B.shift_right(payload, IP_HLEN)
+    total = (length + IP_HLEN).astype(jnp.uint32)
+    z = jnp.zeros_like(total)
+    out = B.set_u8(out, 0, jnp.full_like(total, 0x45))       # v4, ihl=5
+    out = B.set_u8(out, 1, z)                                # dscp
+    out = B.set_be16(out, 2, total)
+    out = B.set_be16(out, 4, ident if ident is not None else z)  # id
+    out = B.set_be16(out, 6, jnp.full_like(total, 0x4000))   # DF
+    out = B.set_u8(out, 8, jnp.full_like(total, 64))         # ttl
+    out = B.set_u8(out, 9, meta["ip_proto"])
+    out = B.set_be16(out, 10, z)                             # csum slot
+    out = B.set_be32(out, 12, meta["src_ip"])
+    out = B.set_be32(out, 16, meta["dst_ip"])
+    csum = B.checksum16(out, 0, jnp.full_like(total, IP_HLEN).astype(jnp.int32))
+    out = B.set_be16(out, 10, csum)
+    return out, length + IP_HLEN

@@ -1,0 +1,54 @@
+"""NAT tile (paper §4.5): virtual IP <-> physical IP translation for
+network virtualization and TCP live migration.
+
+The translation table is runtime state (control-plane rewritable).  The
+tile sits between IP and TCP on both paths (paper §5.3): RX translates
+dst (virtual) -> physical, TX translates src (physical) -> virtual, so the
+remote client only ever sees the stable virtual address while the backing
+connection migrates between accelerators.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+SLOTS = 8
+
+
+def init(entries=None) -> Dict[str, jnp.ndarray]:
+    virt = jnp.zeros((SLOTS,), jnp.uint32)
+    phys = jnp.zeros((SLOTS,), jnp.uint32)
+    for i, (v, p) in enumerate(entries or []):
+        virt = virt.at[i].set(v)
+        phys = phys.at[i].set(p)
+    return {"virt": virt, "phys": phys}
+
+
+def _translate(table_from, table_to, addr):
+    hit = table_from[None, :] == addr[:, None]
+    found = hit.any(axis=1)
+    idx = jnp.argmax(hit, axis=1)
+    return jnp.where(found, table_to[idx], addr), found
+
+
+def rx(nat: Dict, meta: Dict) -> Tuple[Dict, jnp.ndarray]:
+    """virtual dst -> physical dst.  Returns (meta', translated_mask)."""
+    new_dst, found = _translate(nat["virt"], nat["phys"], meta["dst_ip"])
+    m = dict(meta)
+    m["dst_ip"] = new_dst
+    return m, found
+
+
+def tx(nat: Dict, meta: Dict) -> Tuple[Dict, jnp.ndarray]:
+    """physical src -> virtual src."""
+    new_src, found = _translate(nat["phys"], nat["virt"], meta["src_ip"])
+    m = dict(meta)
+    m["src_ip"] = new_src
+    return m, found
+
+
+def update(nat: Dict, slot, virt_ip, phys_ip) -> Dict:
+    """Control-plane rewrite (used during live migration)."""
+    return {"virt": nat["virt"].at[slot].set(jnp.uint32(virt_ip)),
+            "phys": nat["phys"].at[slot].set(jnp.uint32(phys_ip))}

@@ -1,0 +1,51 @@
+"""Minimal RPC framing used by the app tiles (echo / RS / VR / LM serving).
+
+Frame layout (big-endian):
+  [magic u16 = 0xBEE5][msg_type u8][req_id u32][payload_len u16][payload]
+
+Unmodified clients build these frames over standard UDP or TCP sockets
+(frames.py provides the host-side builders).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.net import bytesops as B
+
+MAGIC = 0xBEE5
+HLEN = 9
+
+MSG_ECHO = 1
+MSG_RS_ENCODE = 2
+MSG_VR_PREPARE = 3
+MSG_VR_COMMIT = 4
+MSG_LM_GENERATE = 5
+MSG_CTRL = 6
+
+
+def parse(payload, length):
+    magic = B.be16(payload, 0)
+    msg_type = B.u8(payload, 2)
+    req_id = B.be32(payload, 3)
+    plen = B.be16(payload, 7)
+    ok = (magic == MAGIC) & (plen.astype(jnp.int32) + HLEN <= length)
+    body = B.shift_left(payload, HLEN)
+    return body, plen.astype(jnp.int32), {"msg_type": msg_type,
+                                          "req_id": req_id}, ok
+
+
+def build(payload, length, msg_type, req_id):
+    out = B.shift_right(payload, HLEN)
+    u = jnp.asarray
+    B_ = payload.shape[0]
+    out = B.set_be16(out, 0, jnp.full((B_,), MAGIC, jnp.uint32))
+    out = B.set_u8(out, 2, jnp.broadcast_to(jnp.uint32(msg_type), (B_,))
+                   if not hasattr(msg_type, "shape") else msg_type)
+    out = B.set_be32(out, 3, req_id)
+    out = B.set_be16(out, 7, length.astype(jnp.uint32))
+    return out, length + HLEN
+
+
+def np_frame(msg_type: int, req_id: int, payload: bytes) -> bytes:
+    import struct
+    return struct.pack("!HBIH", MAGIC, msg_type, req_id, len(payload)) + payload

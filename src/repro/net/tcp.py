@@ -1,0 +1,365 @@
+"""Server-side TCP engine (paper §4.4).
+
+Scope matches the paper's prototype: accepts connections (3-way handshake),
+generates sequence/ACK numbers, window-based flow control, fast retransmit
+on 3 dup-ACKs, and timer retransmit.  No SACK, no active open, no
+congestion control (documented paper limitations).  RX and TX share state,
+mirroring the paper's dedicated-wire coupling of the TCP RX/TX tiles.
+
+The engine is a connection *table* — all state is fixed-shape arrays, so a
+connection can be serialized / reinstalled for live migration (paper §6.7)
+and the control plane can inspect any field.
+
+Stream model: rx_buf / tx_buf are linear per-connection byte buffers.
+Out-of-order segments are dropped (the sender's fast-retransmit recovers),
+which is exactly the dup-ACK behavior the paper's engine relies on.
+
+App interface (paper §4.4): the application asks to be notified when N rx
+bytes are available (`app_readable`), then reads them (`app_read`); on TX
+it requests buffer space (`app_tx_space`), copies data (`app_send`), and
+the engine emits segments within the peer window (`tx_emit`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.net import bytesops as B
+
+CLOSED, SYN_RCVD, ESTABLISHED = 0, 1, 2
+TCP_HLEN = 20
+FIN, SYN, RST, PSH, ACK = 0x01, 0x02, 0x04, 0x08, 0x10
+
+U32 = jnp.uint32
+
+
+def _u32(x):
+    return jnp.asarray(x).astype(U32)
+
+
+def init(max_conns: int = 16, rx_buf: int = 4096, tx_buf: int = 4096,
+         local_ip: int = 0x0A000001):
+    C = max_conns
+    z32 = jnp.zeros((C,), U32)
+    zi = jnp.zeros((C,), jnp.int32)
+    return {
+        "state": zi, "remote_ip": z32, "remote_port": z32,
+        "local_port": z32, "rcv_nxt": z32, "snd_nxt": z32, "snd_una": z32,
+        "snd_wnd": z32 + 65535, "dup_acks": zi, "retx_timer": zi,
+        "iss": z32, "irs": z32,
+        "rx_buf": jnp.zeros((C, rx_buf), jnp.uint8),
+        "rx_base": z32, "rx_read": zi,
+        "tx_buf": jnp.zeros((C, tx_buf), jnp.uint8),
+        "tx_staged": zi,
+        "local_ip": _u32(local_ip),
+        "accepts": jnp.zeros((), jnp.int32),   # completed handshakes
+    }
+
+
+# ---------------------------------------------------------------------------
+# segment parse/build
+
+
+def parse_segment(payload, length, meta):
+    """TCP header parse (after IP strip).  Returns (data, dlen, meta')."""
+    src_port = B.be16(payload, 0)
+    dst_port = B.be16(payload, 2)
+    seq = B.be32(payload, 4)
+    ack = B.be32(payload, 8)
+    off_flags = B.be16(payload, 12)
+    doff = ((off_flags >> 12) & 0xF).astype(jnp.int32) * 4
+    flags = off_flags & 0x3F
+    wnd = B.be16(payload, 14)
+    data = B.shift_left(payload, doff)
+    m = dict(meta)
+    m.update({"src_port": src_port, "dst_port": dst_port, "tcp_seq": seq,
+              "tcp_ack": ack, "tcp_flags": flags, "tcp_wnd": wnd})
+    return data, length - doff, m
+
+
+def build_segment(payload, length, meta, with_checksum: bool = True):
+    """Prepend a 20-byte TCP header (meta fields are reply-oriented)."""
+    out = B.shift_right(payload, TCP_HLEN)
+    out = B.set_be16(out, 0, meta["src_port"])
+    out = B.set_be16(out, 2, meta["dst_port"])
+    out = B.set_be32(out, 4, meta["tcp_seq"])
+    out = B.set_be32(out, 8, meta["tcp_ack"])
+    out = B.set_be16(out, 12, (jnp.full_like(meta["src_port"], 5 << 12)
+                               | meta["tcp_flags"]))
+    out = B.set_be16(out, 14, meta["tcp_wnd"])
+    out = B.set_be16(out, 16, jnp.zeros_like(meta["src_port"]))
+    out = B.set_be16(out, 18, jnp.zeros_like(meta["src_port"]))
+    tlen = (length + TCP_HLEN).astype(U32)
+    if with_checksum:
+        pseudo = B.pseudo_header_sum(meta["src_ip"], meta["dst_ip"],
+                                     jnp.full_like(meta["src_ip"], 6), tlen)
+        csum = B.checksum16_with_pseudo(out, 0, tlen.astype(jnp.int32), pseudo)
+        out = B.set_be16(out, 16, csum)
+    return out, length + TCP_HLEN
+
+
+# ---------------------------------------------------------------------------
+# connection lookup / allocation
+
+
+def _lookup(conn, remote_ip, remote_port, local_port):
+    match = ((conn["remote_ip"] == remote_ip)
+             & (conn["remote_port"] == remote_port)
+             & (conn["local_port"] == local_port)
+             & (conn["state"] > CLOSED))
+    found = match.any()
+    idx = jnp.argmax(match)
+    return idx, found
+
+
+def _alloc(conn):
+    free = conn["state"] == CLOSED
+    return jnp.argmax(free), free.any()
+
+
+# ---------------------------------------------------------------------------
+# RX: process one segment (scalars) against the table
+
+
+def rx_one(conn: Dict, seg: Dict, data_row, dlen):
+    """seg: scalar meta (src_ip, src_port, dst_port, tcp_seq, tcp_ack,
+    tcp_flags, tcp_wnd).  Returns (conn', resp) where resp is a dict of
+    scalar reply fields (resp["emit"] False = no reply)."""
+    flags = seg["tcp_flags"]
+    is_syn = (flags & SYN) != 0
+    is_ack = (flags & ACK) != 0
+    is_fin = (flags & FIN) != 0
+    is_rst = (flags & RST) != 0
+
+    idx, found = _lookup(conn, seg["src_ip"], seg["src_port"],
+                         seg["dst_port"])
+    slot, has_free = _alloc(conn)
+    new_conn = is_syn & ~found & has_free
+    i = jnp.where(new_conn, slot, idx)
+    act = found | new_conn            # packet maps to a connection
+
+    st = conn["state"][i]
+    iss = jnp.where(new_conn,
+                    (seg["tcp_seq"] * U32(2654435761) + U32(12345)),
+                    conn["iss"][i])
+    irs = jnp.where(new_conn, seg["tcp_seq"], conn["irs"][i])
+
+    # ---- handshake ------------------------------------------------------
+    do_synack = new_conn | (is_syn & found & (st == SYN_RCVD))
+    established = (st == SYN_RCVD) & is_ack & ~is_syn & \
+        (seg["tcp_ack"] == iss + 1)
+
+    # ---- ACK processing (flow control + fast retransmit) -----------------
+    snd_una = conn["snd_una"][i]
+    snd_nxt = conn["snd_nxt"][i]
+    ack_ok = is_ack & (st == ESTABLISHED)
+    # sequence-space compare on u32 (wrap-safe): a<b via (a-b)>>31
+    advanced = ack_ok & (((snd_una - seg["tcp_ack"]) >> 31) != 0) \
+        & (((seg["tcp_ack"] - snd_nxt - 1) >> 31) != 0)
+    new_una = jnp.where(advanced, seg["tcp_ack"], snd_una)
+    # handshake completion acknowledges our SYN: snd_una := iss+1
+    new_una = jnp.where(established, seg["tcp_ack"], new_una)
+    dup = ack_ok & (seg["tcp_ack"] == snd_una) & (dlen == 0) & \
+        (snd_nxt != snd_una)
+    dup_acks = jnp.where(advanced, 0,
+                         conn["dup_acks"][i] + dup.astype(jnp.int32))
+    fast_retx = dup_acks >= 3
+    dup_acks = jnp.where(fast_retx, 0, dup_acks)
+
+    # ---- in-order data --------------------------------------------------
+    rcv_nxt = jnp.where(new_conn, seg["tcp_seq"] + 1, conn["rcv_nxt"][i])
+    in_order = (st == ESTABLISHED) & (dlen > 0) & (seg["tcp_seq"] == rcv_nxt)
+    rx_off = (rcv_nxt - conn["rx_base"][i]).astype(jnp.int32)
+    RX = conn["rx_buf"].shape[1]
+    fits = in_order & (rx_off + dlen <= RX)
+    # masked write of data_row into rx_buf[i, rx_off:rx_off+dlen]
+    Lrow = data_row.shape[0]
+    dst_idx = rx_off + jnp.arange(Lrow)
+    wmask = fits & (jnp.arange(Lrow) < dlen)
+    row = conn["rx_buf"][i]
+    safe_idx = jnp.clip(dst_idx, 0, RX - 1)
+    row = row.at[safe_idx].set(jnp.where(wmask, data_row, row[safe_idx]))
+    rcv_nxt2 = jnp.where(fits, rcv_nxt + dlen.astype(U32), rcv_nxt)
+    rcv_nxt2 = jnp.where(is_fin & (st == ESTABLISHED), rcv_nxt2 + 1,
+                         rcv_nxt2)
+
+    # ---- state update ---------------------------------------------------
+    new_state = jnp.where(new_conn, SYN_RCVD, st)
+    new_state = jnp.where(established, ESTABLISHED, new_state)
+    new_state = jnp.where(is_fin & (st == ESTABLISHED), CLOSED, new_state)
+    new_state = jnp.where(is_rst & found, CLOSED, new_state)
+
+    upd = lambda a, v: a.at[i].set(jnp.where(act, v, a[i]))
+    conn = dict(conn)
+    conn["state"] = upd(conn["state"], new_state)
+    conn["remote_ip"] = upd(conn["remote_ip"], seg["src_ip"])
+    conn["remote_port"] = upd(conn["remote_port"], seg["src_port"])
+    conn["local_port"] = upd(conn["local_port"], seg["dst_port"])
+    conn["iss"] = upd(conn["iss"], iss)
+    conn["irs"] = upd(conn["irs"], irs)
+    conn["rcv_nxt"] = upd(conn["rcv_nxt"], rcv_nxt2)
+    conn["snd_una"] = upd(conn["snd_una"], jnp.where(new_conn, iss, new_una))
+    conn["snd_nxt"] = upd(conn["snd_nxt"],
+                          jnp.where(new_conn, iss + 1, snd_nxt))
+    conn["snd_wnd"] = upd(conn["snd_wnd"], seg["tcp_wnd"])
+    conn["dup_acks"] = upd(conn["dup_acks"], dup_acks)
+    conn["rx_base"] = upd(conn["rx_base"],
+                          jnp.where(new_conn, seg["tcp_seq"] + 1,
+                                    conn["rx_base"][i]))
+    conn["rx_buf"] = conn["rx_buf"].at[i].set(
+        jnp.where(act, row, conn["rx_buf"][i]))
+    conn["accepts"] = conn["accepts"] + established.astype(jnp.int32)
+
+    # ---- response -------------------------------------------------------
+    # SYN-ACK for new conns; pure ACK for data/FIN; nothing for pure ACKs.
+    want_ack = fits | (is_fin & (st == ESTABLISHED)) | \
+        ((dlen > 0) & (st == ESTABLISHED) & ~in_order)
+    emit = act & (do_synack | want_ack)
+    resp = {
+        "emit": emit,
+        "fast_retx": act & fast_retx,
+        "conn": i,
+        "src_ip": seg["dst_ip"], "dst_ip": seg["src_ip"],
+        "src_port": seg["dst_port"], "dst_port": seg["src_port"],
+        "tcp_seq": jnp.where(do_synack, iss, conn["snd_nxt"][i]),
+        "tcp_ack": rcv_nxt2,
+        "tcp_flags": jnp.where(do_synack, U32(SYN | ACK), U32(ACK)),
+        "tcp_wnd": U32(65535) - (rcv_nxt2 - conn["rx_base"][i]),
+        "established": established,
+    }
+    return conn, resp
+
+
+def rx_batch(conn: Dict, data, dlen, meta):
+    """Sequentially process a batch of parsed segments (order matters)."""
+    Bsz = data.shape[0]
+
+    def step(c, xs):
+        row, dl, m = xs
+        c, resp = rx_one(c, m, row, dl)
+        return c, resp
+
+    metas = {k: meta[k] for k in ("src_ip", "dst_ip", "src_port", "dst_port",
+                                  "tcp_seq", "tcp_ack", "tcp_flags",
+                                  "tcp_wnd")}
+    conn, resps = jax.lax.scan(step, conn, (data, dlen, metas))
+    return conn, resps
+
+
+# ---------------------------------------------------------------------------
+# app interface (paper §4.4 request/notify protocol)
+
+
+def app_readable(conn, i, n):
+    """True when >= n unread in-order bytes are buffered for conn i."""
+    avail = (conn["rcv_nxt"][i] - conn["rx_base"][i]).astype(jnp.int32) \
+        - conn["rx_read"][i]
+    return avail >= n
+
+
+def app_read(conn, i, n: int):
+    """Read n bytes (static size) from the rx stream.  Returns (conn',
+    data (n,), ok)."""
+    ok = app_readable(conn, i, n)
+    off = conn["rx_read"][i]
+    data = jax.lax.dynamic_slice(conn["rx_buf"][i], (off,), (n,))
+    conn = dict(conn)
+    conn["rx_read"] = conn["rx_read"].at[i].add(
+        jnp.where(ok, n, 0).astype(jnp.int32))
+    return conn, data, ok
+
+
+def app_tx_space(conn, i):
+    TX = conn["tx_buf"].shape[1]
+    return TX - conn["tx_staged"][i]
+
+
+def app_send(conn, i, data, n):
+    """Stage n bytes (data: (K,) uint8, n <= K) into the tx buffer."""
+    ok = app_tx_space(conn, i) >= n
+    off = conn["tx_staged"][i]
+    K = data.shape[0]
+    TX = conn["tx_buf"].shape[1]
+    idx = jnp.clip(off + jnp.arange(K), 0, TX - 1)
+    wmask = ok & (jnp.arange(K) < n)
+    row = conn["tx_buf"][i]
+    row = row.at[idx].set(jnp.where(wmask, data, row[idx]))
+    conn = dict(conn)
+    conn["tx_buf"] = conn["tx_buf"].at[i].set(row)
+    conn["tx_staged"] = conn["tx_staged"].at[i].add(
+        jnp.where(ok, n, 0).astype(jnp.int32))
+    return conn, ok
+
+
+def tx_emit(conn, i, mss: int = 1460, retransmit=False):
+    """Emit one data segment for conn i: [snd_nxt, snd_nxt+len) from the tx
+    buffer (or from snd_una when retransmitting), respecting the peer
+    window.  Returns (conn', seg_meta, data (mss,), dlen)."""
+    iss = conn["iss"][i]
+    base_seq = iss + 1                       # stream offset 0 in tx_buf
+    start = jnp.where(retransmit, conn["snd_una"][i], conn["snd_nxt"][i])
+    staged_end = base_seq + conn["tx_staged"][i].astype(U32)
+    in_flight = (start - conn["snd_una"][i]).astype(jnp.int32)
+    wnd_room = conn["snd_wnd"][i].astype(jnp.int32) - in_flight
+    avail = (staged_end - start).astype(jnp.int32)
+    dlen = jnp.clip(jnp.minimum(avail, wnd_room), 0, mss)
+    off = (start - base_seq).astype(jnp.int32)
+    TX = conn["tx_buf"].shape[1]
+    idx = jnp.clip(off + jnp.arange(mss), 0, TX - 1)
+    data = jnp.where(jnp.arange(mss) < dlen, conn["tx_buf"][i][idx], 0)
+    live = (conn["state"][i] == ESTABLISHED) & (dlen > 0)
+    conn = dict(conn)
+    if not retransmit:
+        conn["snd_nxt"] = conn["snd_nxt"].at[i].set(
+            jnp.where(live, start + dlen.astype(U32), conn["snd_nxt"][i]))
+    seg = {
+        "emit": live,
+        "src_ip": conn["local_ip"], "dst_ip": conn["remote_ip"][i],
+        "src_port": conn["local_port"][i], "dst_port": conn["remote_port"][i],
+        "tcp_seq": start, "tcp_ack": conn["rcv_nxt"][i],
+        "tcp_flags": U32(ACK | PSH), "tcp_wnd": U32(65535),
+    }
+    return conn, seg, data, jnp.where(live, dlen, 0)
+
+
+def tick(conn, timeout: int = 8):
+    """Timer retransmit: bump per-conn timers; expired conns with unacked
+    data get snd_nxt rolled back to snd_una (go-back-N)."""
+    unacked = (conn["snd_nxt"] != conn["snd_una"]) & \
+        (conn["state"] == ESTABLISHED)
+    timers = jnp.where(unacked, conn["retx_timer"] + 1, 0)
+    expired = timers >= timeout
+    conn = dict(conn)
+    conn["retx_timer"] = jnp.where(expired, 0, timers)
+    conn["snd_nxt"] = jnp.where(expired, conn["snd_una"], conn["snd_nxt"])
+    return conn, expired
+
+
+# ---------------------------------------------------------------------------
+# live migration (paper §6.7): serialize / reinstall one connection
+
+
+_MIG_FIELDS = ("state", "remote_ip", "remote_port", "local_port", "rcv_nxt",
+               "snd_nxt", "snd_una", "snd_wnd", "dup_acks", "iss", "irs",
+               "rx_base", "rx_read", "tx_staged")
+
+
+def serialize_conn(conn, i):
+    """Extract connection i as a flat blob dict (device arrays)."""
+    blob = {k: conn[k][i] for k in _MIG_FIELDS}
+    blob["rx_buf"] = conn["rx_buf"][i]
+    blob["tx_buf"] = conn["tx_buf"][i]
+    return blob
+
+
+def install_conn(conn, i, blob):
+    """Reinstall a serialized connection into slot i of another engine."""
+    conn = dict(conn)
+    for k in _MIG_FIELDS:
+        conn[k] = conn[k].at[i].set(blob[k].astype(conn[k].dtype))
+    conn["rx_buf"] = conn["rx_buf"].at[i].set(blob["rx_buf"])
+    conn["tx_buf"] = conn["tx_buf"].at[i].set(blob["tx_buf"])
+    return conn

@@ -1,0 +1,47 @@
+"""UDP tile: parse + (optional) checksum verify on RX, build on TX."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.net import bytesops as B
+from repro.net.ipv4 import PROTO_UDP
+
+UDP_HLEN = 8
+
+
+def parse(payload, length, meta):
+    """Returns (stripped, new_length, meta', ok)."""
+    src_port = B.be16(payload, 0)
+    dst_port = B.be16(payload, 2)
+    udp_len = B.be16(payload, 4)
+    csum = B.be16(payload, 6)
+    pseudo = B.pseudo_header_sum(meta["src_ip"], meta["dst_ip"],
+                                 jnp.full_like(meta["src_ip"], PROTO_UDP),
+                                 udp_len)
+    full = B.checksum16_with_pseudo(payload, 0, udp_len.astype(jnp.int32),
+                                    pseudo)
+    ok = (csum == 0) | (full == 0)         # csum 0 = disabled (RFC 768)
+    ok &= udp_len.astype(jnp.int32) <= length
+    stripped = B.shift_left(payload, UDP_HLEN)
+    m = dict(meta)
+    m.update({"src_port": src_port, "dst_port": dst_port,
+              "udp_len": udp_len})
+    return stripped, udp_len.astype(jnp.int32) - UDP_HLEN, m, ok
+
+
+def build(payload, length, meta, with_checksum: bool = True):
+    """Prepend a UDP header; meta ports are already reply-oriented."""
+    out = B.shift_right(payload, UDP_HLEN)
+    ulen = (length + UDP_HLEN).astype(jnp.uint32)
+    out = B.set_be16(out, 0, meta["src_port"])
+    out = B.set_be16(out, 2, meta["dst_port"])
+    out = B.set_be16(out, 4, ulen)
+    out = B.set_be16(out, 6, jnp.zeros_like(ulen))
+    if with_checksum:
+        pseudo = B.pseudo_header_sum(meta["src_ip"], meta["dst_ip"],
+                                     jnp.full_like(meta["src_ip"], PROTO_UDP),
+                                     ulen)
+        csum = B.checksum16_with_pseudo(out, 0, ulen.astype(jnp.int32), pseudo)
+        csum = jnp.where(csum == 0, jnp.uint32(0xFFFF), csum)
+        out = B.set_be16(out, 6, csum)
+    return out, length + UDP_HLEN

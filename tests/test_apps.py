@@ -1,0 +1,183 @@
+"""End-to-end application tests: Figure-4 UDP stack with echo / RS / VR
+apps, TCP live migration, LM serving engine + session migration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import echo, reed_solomon, vr_witness
+from repro.apps.lm_server import (LmServerApp, decode_reply, encode_request)
+from repro.configs import get_smoke_config
+from repro.kernels.rs_encode import gf
+from repro.kernels.rs_encode.ref import rs_encode_np
+from repro.models import model
+from repro.net import frames as F, rpc
+from repro.net.stack import UdpStack
+from repro.serve.engine import ServeEngine
+
+IP_C = F.ip("10.0.0.2")
+IP_S = F.ip("10.0.0.1")
+
+
+def run_stack(stack, state, reqs, max_len=600):
+    frames = [F.udp_rpc_frame(IP_C, IP_S, 5000 + i, port,
+                              rpc.np_frame(mt, i, body))
+              for i, (port, mt, body) in enumerate(reqs)]
+    payload, length = F.to_batch(frames, max_len)
+    return stack.rx_tx(state, jnp.asarray(payload), jnp.asarray(length))
+
+
+def parse_reply(q, ql, i):
+    from repro.net import eth, ipv4, udp
+    p, l, m = eth.parse(q, ql)
+    p, l, m2, ok1 = ipv4.parse(p, l)
+    m.update(m2)
+    p, l, m3, ok2 = udp.parse(p, l, m)
+    body, blen, rmeta, ok3 = rpc.parse(p, l)
+    assert bool(ok1[i]) and bool(ok2[i]) and bool(ok3[i])
+    return bytes(np.asarray(body[i, :blen[i]]).tobytes()), m3
+
+
+# ---------------------------------------------------------------------------
+
+
+def test_udp_echo_through_stack():
+    stack = UdpStack([echo.make(port=7, n_replicas=2)], IP_S)
+    state = stack.init_state()
+    state, q, ql, alive, info = run_stack(
+        stack, state, [(7, rpc.MSG_ECHO, b"ping-0"), (7, rpc.MSG_ECHO, b"ping-1")])
+    assert bool(alive.all())
+    body, _ = parse_reply(q, ql, 0)
+    assert body == b"ping-0"
+    served = np.asarray(state["apps"]["echo"]["served"])
+    assert served.sum() == 2 and (served == 1).all()  # round-robin spread
+
+
+def test_rs_app_parity_correct():
+    stack = UdpStack([reed_solomon.make(port=9000, n_replicas=4)], IP_S)
+    state = stack.init_state()
+    rng = np.random.default_rng(0)
+    block = rng.integers(0, 256, 4096, dtype=np.uint8).tobytes()
+    state, q, ql, alive, _ = run_stack(
+        stack, state, [(9000, rpc.MSG_RS_ENCODE, block)], max_len=4400)
+    body, _ = parse_reply(q, ql, 0)
+    assert len(body) == 1024
+    # oracle: parity over the 8x512 layout used by encode_blocks
+    data = np.frombuffer(block, np.uint8).reshape(8, 512)
+    want = rs_encode_np(data, gf.generator_matrix(8, 2)).reshape(-1)
+    np.testing.assert_array_equal(np.frombuffer(body, np.uint8), want)
+
+
+def test_rs_replicas_round_robin_scaleout():
+    stack = UdpStack([reed_solomon.make(port=9000, n_replicas=4)], IP_S)
+    state = stack.init_state()
+    block = bytes(4096)
+    reqs = [(9000, rpc.MSG_RS_ENCODE, block)] * 8
+    state, *_ = run_stack(stack, state, reqs, max_len=4400)
+    ops = np.asarray(state["apps"]["rs"]["ops"])
+    assert (ops == 2).all()          # 8 requests over 4 replicas
+
+
+def _vr_req(op, view, op_num, digest=0xABCD):
+    import struct
+    return struct.pack("!IIII", op, view, op_num, digest)
+
+
+def test_vr_witness_prepare_and_read():
+    stack = UdpStack([vr_witness.make(base_port=9100, n_shards=4)], IP_S)
+    state = stack.init_state()
+    reqs = [
+        (9100, rpc.MSG_VR_PREPARE, _vr_req(vr_witness.OP_PREPARE, 0, 1)),
+        (9100, rpc.MSG_VR_PREPARE, _vr_req(vr_witness.OP_PREPARE, 0, 2)),
+        (9101, rpc.MSG_VR_PREPARE, _vr_req(vr_witness.OP_PREPARE, 0, 1)),
+        (9100, rpc.MSG_VR_PREPARE, _vr_req(vr_witness.OP_READ_VERIFY, 0, 0)),
+        (9100, rpc.MSG_VR_PREPARE, _vr_req(vr_witness.OP_PREPARE, 0, 9)),
+    ]
+    state, q, ql, alive, _ = run_stack(stack, state, reqs)
+    vr = state["apps"]["vr"]
+    assert int(vr["last_op"][0]) == 2          # shard 0: ops 1,2 in order
+    assert int(vr["last_op"][1]) == 1          # shard 1 independent
+    body, _ = parse_reply(q, ql, 3)
+    assert body[:4] == b"\x00\x00\x00\x00"     # read verified (ST_OK)
+    body4, _ = parse_reply(q, ql, 4)
+    assert body4[:4] == b"\x00\x00\x00\x01"    # gap (op 9) rejected
+
+
+def test_vr_view_change():
+    stack = UdpStack([vr_witness.make(base_port=9100, n_shards=1)], IP_S)
+    state = stack.init_state()
+    reqs = [(9100, rpc.MSG_VR_PREPARE,
+             _vr_req(vr_witness.OP_START_VIEW, 3, 0)),
+            (9100, rpc.MSG_VR_PREPARE,
+             _vr_req(vr_witness.OP_READ_VERIFY, 0, 0))]
+    state, q, ql, _, _ = run_stack(stack, state, reqs)
+    assert int(state["apps"]["vr"]["view"][0]) == 3
+    body, _ = parse_reply(q, ql, 1)            # stale-view read rejected
+    assert body[:4] == b"\x00\x00\x00\x01"
+
+
+# ---------------------------------------------------------------------------
+# LM serving engine
+
+
+@pytest.fixture(scope="module")
+def small_engine():
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = model.init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def test_engine_matches_plain_decode(small_engine):
+    cfg, params = small_engine
+    eng = ServeEngine(cfg, params, max_sessions=2, max_seq=32)
+    prompt = np.arange(1, 9, dtype=np.int32)
+    sid = eng.new_session(prompt)
+    got = eng.generate(sid, 5)
+    # oracle: plain greedy loop with init_cache
+    cache = model.init_cache(cfg, 1, 32)
+    logits, pcache = model.prefill(cfg, params, {"tokens": jnp.asarray(prompt)[None]})
+    tok = model.greedy_token(cfg, logits)
+    # install prefill cache into a 32-long cache by replaying decode steps
+    cache = model.init_cache(cfg, 1, 32)
+    toks = list(prompt) + [int(tok[0])]
+    for t, x in enumerate(toks[:-1]):
+        lg, cache = model.decode_step(cfg, params, cache,
+                                      jnp.asarray([x], jnp.int32),
+                                      jnp.int32(t))
+    want = []
+    cur = toks[-1]
+    for i in range(5):
+        lg, cache = model.decode_step(cfg, params, cache,
+                                      jnp.asarray([cur], jnp.int32),
+                                      jnp.int32(len(prompt) + i))
+        cur = int(model.greedy_token(cfg, lg)[0])
+        want.append(cur)
+    assert got == want
+
+
+def test_session_migration_between_engines(small_engine):
+    cfg, params = small_engine
+    a = ServeEngine(cfg, params, max_sessions=2, max_seq=32)
+    b = ServeEngine(cfg, params, max_sessions=2, max_seq=32)
+    prompt = np.asarray([3, 1, 4, 1, 5], np.int32)
+    sid = a.new_session(prompt)
+    first = a.generate(sid, 2)
+    # migrate mid-generation; continuation must match a non-migrated run
+    ref = ServeEngine(cfg, params, max_sessions=2, max_seq=32)
+    rid = ref.new_session(prompt)
+    ref_all = ref.generate(rid, 6)
+    app_a, app_b = LmServerApp(a), LmServerApp(b)
+    app_a.session_map[99] = sid
+    app_a.migrate_session_to(99, app_b)
+    rest = app_b.engine.generate(app_b.session_map[99], 4)
+    assert first + rest == ref_all
+
+
+def test_lm_rpc_app_roundtrip(small_engine):
+    cfg, params = small_engine
+    app = LmServerApp(ServeEngine(cfg, params, max_sessions=2, max_seq=32))
+    req = encode_request(7, 3, [5, 6, 7])
+    reply = app.handle(req)
+    session, toks = decode_reply(reply)
+    assert session == 7 and len(toks) == 3
+    assert all(0 <= t < cfg.vocab for t in toks)

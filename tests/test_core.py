@@ -1,0 +1,217 @@
+"""Beehive core: topology validation, deadlock analysis (paper Fig. 5),
+routing tables, scale-out dispatch, control plane."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (DROP, DeadlockReport, RouteTable, TopologyConfig,
+                        analyze, flow_hash, make_table)
+from repro.core import control, scaleout
+from repro.core.noc import chain_channels, chain_latency_ns, dor_path
+
+
+# ---------------------------------------------------------------------------
+# NoC model
+
+
+def test_dor_path_x_then_y():
+    path = dor_path((0, 0), (2, 1))
+    assert [(c.src, c.dst) for c in path] == [
+        ((0, 0), (1, 0)), ((1, 0), (2, 0)), ((2, 0), (2, 1))]
+
+
+def test_chain_latency_matches_paper_magnitude():
+    # paper: 368 ns (92 cycles) through eth->ip->udp->app->udp->ip->eth
+    chain = [(0, 0), (1, 0), (2, 0), (3, 0), (2, 0), (1, 0), (0, 0)]
+    ns = chain_latency_ns(chain, payload_bytes=64)
+    assert 200 < ns < 600
+
+
+# ---------------------------------------------------------------------------
+# deadlock (paper Fig. 5)
+
+
+def _fig5(layout):
+    topo = TopologyConfig("fig5", 4, 1)
+    for name, (x, y) in layout.items():
+        topo.add_tile(name, name, x, y)
+    topo.add_chain("eth_rx", "ip_rx", "udp_rx", "app")
+    return topo
+
+
+def test_fig5a_deadlocks():
+    # IP placed past UDP: udp->app must re-acquire the (1,0)->(2,0) link
+    topo = _fig5({"eth_rx": (0, 0), "udp_rx": (1, 0),
+                  "ip_rx": (2, 0), "app": (3, 0)})
+    rep = analyze(topo)
+    assert not rep.ok
+    assert rep.self_conflicts or rep.cycles
+
+
+def test_fig5b_safe():
+    topo = _fig5({"eth_rx": (0, 0), "ip_rx": (1, 0),
+                  "udp_rx": (2, 0), "app": (3, 0)})
+    rep = analyze(topo)
+    assert rep.ok, rep.summary()
+
+
+def test_cross_chain_cycle_detected():
+    topo = TopologyConfig("cross", 2, 2)
+    topo.add_tile("a", "a", 0, 0)
+    topo.add_tile("b", "b", 1, 0)
+    topo.add_tile("c", "c", 1, 1)
+    topo.add_tile("d", "d", 0, 1)
+    # two chains that wait on each other's channels around the ring
+    topo.add_chain("a", "b", "c")
+    topo.add_chain("c", "d", "a")
+    rep = analyze(topo)
+    # DOR makes this particular pair safe or not; the analysis must at
+    # least run and produce a coherent verdict
+    assert isinstance(rep, DeadlockReport)
+
+
+def test_ipinip_duplicated_tiles_avoid_reacquisition():
+    # repeated IP headers break resource ordering unless the tile is
+    # duplicated (paper: two IP RX tiles)
+    topo = TopologyConfig("ipinip-bad", 4, 1)
+    topo.add_tile("eth_rx", "eth_rx", 0, 0)
+    topo.add_tile("ip_rx", "ip_rx", 1, 0)
+    topo.add_tile("app", "app", 2, 0)
+    topo.add_chain("eth_rx", "ip_rx", "ip_rx", "app")  # decap loops back
+    rep = analyze(topo)
+    assert rep.ok  # same-tile hop uses no channels; now the deadlock case:
+    topo2 = TopologyConfig("ipinip-loop", 4, 1)
+    topo2.add_tile("eth_rx", "eth_rx", 0, 0)
+    topo2.add_tile("ip_rx", "ip_rx", 2, 0)
+    topo2.add_tile("decap", "ipinip", 1, 0)
+    topo2.add_tile("app", "app", 3, 0)
+    # ip -> decap (west) -> ip again (east, re-acquiring (1,0)->(2,0))
+    topo2.add_chain("eth_rx", "ip_rx", "decap", "ip_rx", "app")
+    rep2 = analyze(topo2)
+    assert not rep2.ok
+    # the fix: duplicate the IP tile after decap
+    topo3 = TopologyConfig("ipinip-dup", 4, 1)
+    topo3.add_tile("eth_rx", "eth_rx", 0, 0)
+    topo3.add_tile("ip_rx", "ip_rx", 1, 0)
+    topo3.add_tile("ip_rx2", "ip_rx", 2, 0)
+    topo3.add_tile("app", "app", 3, 0)
+    topo3.add_chain("eth_rx", "ip_rx", "ip_rx2", "app")
+    assert analyze(topo3).ok
+
+
+# ---------------------------------------------------------------------------
+# topology validation + tooling
+
+
+def test_validation_catches_errors():
+    topo = TopologyConfig("bad", 2, 2)
+    topo.add_tile("a", "a", 0, 0)
+    topo.add_tile("a", "a", 5, 0)          # dup name + out of bounds
+    topo.add_tile("b", "b", 0, 0)          # coordinate collision
+    topo.add_chain("a", "missing")
+    errs = topo.validate()
+    assert len(errs) >= 3
+
+
+def test_autofill_and_wiring():
+    topo = TopologyConfig("t", 2, 2)
+    topo.add_tile("a", "a", 0, 0)
+    assert len(topo.filled_coords()) == 3      # empty router tiles
+    assert len(topo.wiring()) == 4             # 2x2 mesh edges
+
+
+def test_config_loc_counting():
+    topo = TopologyConfig("t", 4, 4)
+    topo.add_tile("udp_rx", "udp_rx", 0, 0)
+    t = topo.add_tile("rs", "app:rs", 1, 0)
+    topo.add_route("udp_rx", "udp_port", 9000, "rs")
+    loc = topo.config_loc(["rs"])
+    assert 0 < loc < 40       # paper Table 1: tens of lines per tile
+
+
+# ---------------------------------------------------------------------------
+# routing tables
+
+
+def test_route_table_lookup_and_rewrite():
+    t = make_table([(0x0800, 3), (0x86DD, 4)], default=DROP)
+    field = jnp.asarray([0x0800, 0x1234, 0x86DD], jnp.int32)
+    nxt = t.lookup(field)
+    assert nxt.tolist() == [3, DROP, 4]
+    t2 = t.set_entry(2, 0x1234, 7)        # runtime rewrite, no rebuild
+    assert t2.lookup(field).tolist() == [3, 7, 4]
+
+
+def test_flow_hash_is_flow_affine():
+    meta = {k: jnp.asarray([1, 1, 2], jnp.int32)
+            for k in ("src_ip", "dst_ip", "src_port", "dst_port")}
+    h = flow_hash(meta)
+    assert h[0] == h[1] and h[0] != h[2]
+
+
+# ---------------------------------------------------------------------------
+# scale-out dispatch
+
+
+def test_round_robin_spreads_evenly():
+    d = scaleout.make_dispatch([10, 11, 12, 13])
+    mask = jnp.ones((8,), bool)
+    d, nxt = scaleout.round_robin(d, mask)
+    counts = [(nxt == t).sum() for t in (10, 11, 12, 13)]
+    assert all(c == 2 for c in counts)
+    assert int(d.rr_counter) == 8
+
+
+def test_dispatch_skips_unhealthy():
+    d = scaleout.make_dispatch([10, 11, 12, 13])
+    d = scaleout.mark_health(d, 2, False)
+    mask = jnp.ones((9,), bool)
+    _, nxt = scaleout.round_robin(d, mask)
+    assert 12 not in set(nxt.tolist())
+    assert set(nxt.tolist()) == {10, 11, 13}
+
+
+def test_port_match_shards():
+    d = scaleout.make_dispatch([20, 21, 22, 23])
+    port = jnp.asarray([9000, 9001, 9003], jnp.int32)
+    nxt = scaleout.by_port(d, port, 9000)
+    assert nxt.tolist() == [20, 21, 23]
+
+
+def test_replicate_expands_chains():
+    topo = TopologyConfig("t", 8, 2)
+    topo.add_tile("udp_rx", "udp_rx", 0, 0)
+    topo.add_tile("rs", "app:rs", 1, 0)
+    topo.add_chain("udp_rx", "rs")
+    names = scaleout.replicate(topo, "rs", 4,
+                               [(1, 0), (2, 0), (3, 0), (4, 0)])
+    assert len(names) == 4
+    assert len(topo.chains) == 4
+    assert not topo.has_tile("rs")
+    assert analyze(topo).ok
+
+
+# ---------------------------------------------------------------------------
+# control plane
+
+
+def test_controller_nat_update_versioned():
+    ctrl = control.make_controller()
+    tables = {"nat": {"virt": jnp.zeros((8,), jnp.uint32),
+                      "phys": jnp.zeros((8,), jnp.uint32)}}
+    cmd = control.decode_command(jnp.asarray(
+        [control.OP_NAT_SET, 0, 3, 0x0A000001, 0x0A000002], jnp.uint32))
+    ctrl, tables, ack = control.controller_apply(ctrl, cmd, tables)
+    assert int(ctrl.version) == 1
+    assert int(tables["nat"]["virt"][3]) == 0x0A000001
+    assert int(tables["nat"]["phys"][3]) == 0x0A000002
+
+
+def test_controller_health_update():
+    ctrl = control.make_controller()
+    tables = {"dispatch": scaleout.make_dispatch([1, 2, 3])}
+    cmd = control.decode_command(jnp.asarray(
+        [control.OP_HEALTH_SET, 0, 1, 0, 0], jnp.uint32))
+    ctrl, tables, _ = control.controller_apply(ctrl, cmd, tables)
+    assert not bool(tables["dispatch"].healthy[1])
+    assert int(ctrl.version) == 1
