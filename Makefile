@@ -1,0 +1,22 @@
+# Test tiers
+#
+#   make test-fast   tier-1 verify loop: everything except @slow
+#                    (distributed subprocess suite, per-arch model smokes,
+#                    trainer loops, big kernel sweeps) — about a minute
+#   make test        the full suite (what CI / the PR gate runs)
+#   make bench       the paper-benchmark battery
+
+PY ?= python
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+export PYTHONPATH
+
+.PHONY: test-fast test bench
+
+test-fast:
+	$(PY) -m pytest -q -m "not slow"
+
+test:
+	$(PY) -m pytest -q
+
+bench:
+	$(PY) benchmarks/run.py

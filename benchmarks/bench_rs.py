@@ -43,7 +43,8 @@ def run():
     p, l = jnp.asarray(payload), jnp.asarray(length)
     base_us = None
     for n in (1, 2, 3, 4):
-        stack = UdpStack([reed_solomon.make(port=9000, n_replicas=n)], IP_S)
+        stack = UdpStack([reed_solomon.make(port=9000, n_replicas=n)], IP_S,
+                         with_telemetry=False)
         state = stack.init_state()
         fn = jax.jit(lambda s, pp, ll: stack.rx_tx(s, pp, ll))
         us = time_call(fn, state, p, l)

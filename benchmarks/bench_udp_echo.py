@@ -22,7 +22,8 @@ SIZES = (64, 256, 1024, 4096, 8962)
 
 
 def run():
-    stack = UdpStack([echo.make(port=7, n_replicas=1)], IP_S)
+    stack = UdpStack([echo.make(port=7, n_replicas=1)], IP_S,
+                     with_telemetry=False)
     out = []
     for size in SIZES:
         pay = max(1, size - 42 - rpc.HLEN)   # eth+ip+udp+rpc overhead

@@ -37,7 +37,7 @@ def run():
     out = []
     for shards in (1, 2, 3, 4):
         stack = UdpStack([vr_witness.make(base_port=9100, n_shards=shards)],
-                         IP_S)
+                         IP_S, with_telemetry=False)
         state = stack.init_state()
         payload, length = _frames(shards)
         p, l = jnp.asarray(payload), jnp.asarray(length)

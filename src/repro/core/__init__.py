@@ -7,4 +7,6 @@ from repro.core.topology import RouteEntry, TileDecl, TopologyConfig
 from repro.core.deadlock import DeadlockReport, analyze, assert_deadlock_free
 from repro.core.routing import DROP, RouteTable, flow_hash, make_table
 from repro.core.tile import StackRuntime, TERMINAL, Tile
+from repro.core.compiler import (CompileError, CompiledPipeline,
+                                 StackCompiler, register_tile)
 from repro.core import control, scaleout, telemetry

@@ -1,0 +1,427 @@
+"""Topology-compiled stack executor.
+
+The paper's stacks are *configurations*: protocol and application elements
+are tiles over the NoC, and the processing graph is whatever the declared
+routes say — adding NAT to the TCP path, IP-in-IP to the UDP path, or a
+new app replica is a topology edit, never a code edit.  This module makes
+the Python runtime behave the same way: :class:`StackCompiler` takes any
+validated :class:`TopologyConfig` and emits one jittable batch pipeline.
+
+Compilation steps:
+
+  1. tiles are grouped into execution nodes (app replicas — tiles whose
+     kind is ``app:<name>`` — collapse into one dispatch group, mirroring
+     the paper's scale-out sets);
+  2. the route entries define a DAG over nodes; nodes are topologically
+     ordered (stable in declaration order, so replica dispatch matches the
+     builder's app order);
+  3. each node's kind is bound to a *tile function* from the registry
+     (``register_tile``); per-tile state threads through one state pytree;
+  4. each packet's path is predicated by the route-match fields
+     (``ethertype``, ``ip_proto``, ``udp_port``, …): a packet "arrives" at
+     a node iff some in-edge's source succeeded on it AND the route key
+     matches — the Python analog of the paper's CAM routing, with no
+     hardcoded per-protocol branches anywhere;
+  5. every node gets a :class:`telemetry.RingLog` in the state pytree and
+     the compiled pipeline appends one counter row per batch per node
+     (packets-in, drops, a compile-time NoC latency estimate from
+     ``noc.chain_latency_cycles``) — diagnostics come for free on every
+     path.
+
+Tile function contract::
+
+    @register_tile("my_kind", init=my_init)          # my_init(ctx) -> dict
+    def my_tile(state, carrier, pred, ctx):
+        ...
+        return state, carrier, ok        # ok: (B,) bool or None (all pass)
+
+``state`` is the full stack state dict (tile functions own documented
+slices of it: ``conn`` for TCP, ``nat`` for NAT tables, ``dispatch`` /
+``apps`` for app groups).  ``carrier`` is the per-batch value dict
+(payload/length/meta plus direction-specific keys); functions mutate a
+fresh shallow copy provided by the executor.  ``pred`` is the node's
+arrival predicate.  ``ctx`` is a :class:`TileContext`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import deadlock, telemetry
+from repro.core.noc import chain_latency_cycles
+from repro.core.topology import RouteEntry, TileDecl, TopologyConfig
+
+# reference payload for the per-tile NoC latency estimate (the paper's
+# latency measurement uses 64-byte messages)
+REF_PAYLOAD_BYTES = 64
+
+
+class CompileError(ValueError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# tile-function registry
+
+
+@dataclasses.dataclass
+class TileSpec:
+    fn: Callable
+    init: Optional[Callable] = None     # (ctx) -> state-dict contribution
+    alive: bool = False                 # RX parse tile: pred & ok feeds the
+                                        # chain's "alive" mask
+
+
+TILE_REGISTRY: Dict[str, TileSpec] = {}
+
+
+def register_tile(kind: str, init: Optional[Callable] = None,
+                  alive: bool = False):
+    """Decorator binding a tile kind to its jittable tile function.  Pass
+    alive=True for RX-side parse tiles whose success gates packet
+    validity (their pred & ok becomes carrier['alive'] downstream)."""
+    def deco(fn):
+        TILE_REGISTRY[kind] = TileSpec(fn=fn, init=init, alive=alive)
+        return fn
+    return deco
+
+
+def resolve_kind(kind: str) -> TileSpec:
+    """Exact kind first, then the family before ':' (app:echo -> app)."""
+    if kind in TILE_REGISTRY:
+        return TILE_REGISTRY[kind]
+    fam = kind.split(":", 1)[0]
+    if fam in TILE_REGISTRY:
+        return TILE_REGISTRY[fam]
+    raise CompileError(f"no tile function registered for kind {kind!r} "
+                       f"(known: {sorted(TILE_REGISTRY)})")
+
+
+@dataclasses.dataclass
+class TileContext:
+    name: str                   # node name (tile name / app group name)
+    kind: str
+    members: List[TileDecl]     # 1 entry for plain tiles, N for app groups
+    binding: Any                # e.g. the AppDecl for app groups
+    options: Dict[str, Any]     # compiler-level options (local_ip, ...)
+    lat_cycles: int             # NoC latency estimate from the ingress
+    index: int                  # execution position
+
+
+# ---------------------------------------------------------------------------
+# route-match predicates (the CAM lookup, paper §4.2)
+
+_MATCH_FIELD = {"ethertype": "ethertype", "ip_proto": "ip_proto",
+                "udp_port": "dst_port", "tcp_port": "dst_port"}
+
+
+def _match_pred(route: RouteEntry, carrier, n):
+    """Per-packet bool for one route entry, evaluated on the live meta."""
+    field = _MATCH_FIELD.get(route.match)
+    if field is None or route.key is None:     # const / rr / flow_hash / vip
+        return jnp.ones((n,), bool)            # wildcard: dispatch decides
+    return carrier["meta"][field] == route.key
+
+
+# ---------------------------------------------------------------------------
+# nodes + compiler
+
+
+@dataclasses.dataclass
+class _Node:
+    name: str
+    kind: str
+    members: List[TileDecl]
+    index: int
+
+
+def deep_merge(dst: dict, src: dict) -> dict:
+    for k, v in src.items():
+        if k in dst and isinstance(dst[k], dict) and isinstance(v, dict):
+            deep_merge(dst[k], v)
+        else:
+            dst[k] = v
+    return dst
+
+
+class StackCompiler:
+    """Compiles a TopologyConfig into executable pipelines.
+
+    bindings: extra per-node configuration, keyed by node name (the app
+    group name for ``app:*`` tiles).  options: stack-level settings read
+    by tile init functions (``local_ip``, ``max_conns``, ``nat_entries``,
+    ``outer_src``/``outer_dst`` for IP-in-IP, ...).
+    """
+
+    def __init__(self, topo: TopologyConfig,
+                 bindings: Optional[Dict[str, Any]] = None,
+                 options: Optional[Dict[str, Any]] = None,
+                 check_deadlock: bool = True,
+                 noc: str = "data"):
+        errs = topo.validate()
+        if errs:
+            raise CompileError("invalid topology:\n" + "\n".join(errs))
+        if check_deadlock:
+            deadlock.assert_deadlock_free(topo)
+        self.topo = topo
+        self.bindings = bindings or {}
+        self.options = options or {}
+
+        # ---- group tiles into nodes -----------------------------------
+        self.nodes: Dict[str, _Node] = {}
+        self._node_of: Dict[str, str] = {}
+        for t in topo.tiles_on(noc):
+            nname = (t.kind.split(":", 1)[1] if t.kind.startswith("app:")
+                     else t.name)
+            node = self.nodes.get(nname)
+            if node is None:
+                self.nodes[nname] = _Node(nname, t.kind, [t],
+                                          len(self.nodes))
+            else:
+                if node.kind != t.kind:
+                    raise CompileError(
+                        f"group {nname!r} mixes kinds {node.kind!r} and "
+                        f"{t.kind!r}")
+                node.members.append(t)
+            self._node_of[t.name] = nname
+
+        # ---- route edges between nodes --------------------------------
+        self.edges: List[Tuple[str, str, RouteEntry]] = []
+        for t in topo.tiles_on(noc):
+            for r in t.routes:
+                src = self._node_of.get(t.name)
+                dst = self._node_of.get(r.next_tile)
+                if src is None or dst is None or src == dst:
+                    continue                       # intra-group / other noc
+                self.edges.append((src, dst, r))
+
+    # ---- ordering --------------------------------------------------------
+    def _reachable(self, ingress: str) -> List[str]:
+        seen = {ingress}
+        frontier = [ingress]
+        while frontier:
+            cur = frontier.pop()
+            for s, d, _ in self.edges:
+                if s == cur and d not in seen:
+                    seen.add(d)
+                    frontier.append(d)
+        return sorted(seen, key=lambda n: self.nodes[n].index)
+
+    def _topo_order(self, names: Sequence[str]) -> List[str]:
+        names = set(names)
+        indeg = {n: 0 for n in names}
+        for s, d, _ in self.edges:
+            if s in names and d in names:
+                indeg[d] += 1
+        order: List[str] = []
+        ready = sorted([n for n, d in indeg.items() if d == 0],
+                       key=lambda n: self.nodes[n].index)
+        while ready:
+            cur = ready.pop(0)
+            order.append(cur)
+            for s, d, _ in self.edges:
+                if s == cur and d in indeg:
+                    indeg[d] -= 1
+                    if indeg[d] == 0:
+                        ready.append(d)
+            ready.sort(key=lambda n: self.nodes[n].index)
+        if len(order) != len(names):
+            cyc = sorted(names - set(order))
+            raise CompileError(f"route graph has a cycle through {cyc}")
+        return order
+
+    def _latency_estimates(self, ingress: str,
+                           names: Sequence[str]) -> Dict[str, int]:
+        """Compile-time NoC latency (cycles) from the ingress tile to each
+        node, along the shortest route-graph path (BFS)."""
+        parent: Dict[str, Optional[str]] = {ingress: None}
+        frontier = [ingress]
+        while frontier:
+            nxt = []
+            for cur in frontier:
+                for s, d, _ in self.edges:
+                    if s == cur and d not in parent:
+                        parent[d] = cur
+                        nxt.append(d)
+            frontier = nxt
+        out = {}
+        for n in names:
+            path, cur = [], n
+            while cur is not None:
+                path.append(cur)
+                cur = parent.get(cur)
+            coords = [self.nodes[p].members[0].coord for p in reversed(path)]
+            out[n] = chain_latency_cycles(coords, REF_PAYLOAD_BYTES)
+        return out
+
+    def _is_trunk(self, ingress: str, names, node: str) -> bool:
+        """True when every packet path from the ingress passes through
+        `node` (route-DAG post-dominance): no sink stays reachable once the
+        node is removed.  A trunk alive-tile *gates* the whole stack (its
+        pred & ok replaces the alive mask, like the hand-written chains);
+        a branch alive-tile only judges the packets routed through it."""
+        names = set(names)
+        sinks = {n for n in names
+                 if not any(s == n and d in names for s, d, _ in self.edges)}
+        seen = {ingress} if ingress != node else set()
+        frontier = list(seen)
+        while frontier:
+            cur = frontier.pop()
+            for s, d, _ in self.edges:
+                if s == cur and d in names and d != node and d not in seen:
+                    seen.add(d)
+                    frontier.append(d)
+        return not (seen & sinks)
+
+    # ---- compilation -----------------------------------------------------
+    def compile(self, ingress: str) -> "CompiledPipeline":
+        """Pipeline over every node reachable from `ingress` (a tile name)."""
+        if ingress not in self._node_of:
+            raise CompileError(f"unknown ingress tile {ingress!r}")
+        start = self._node_of[ingress]
+        names = self._reachable(start)
+        order = self._topo_order(names)
+        lats = self._latency_estimates(start, names)
+
+        stages = []
+        for i, n in enumerate(order):
+            node = self.nodes[n]
+            spec = resolve_kind(node.kind)
+            binding = self.bindings.get(n, self.bindings.get(node.kind))
+            ctx = TileContext(name=n, kind=node.kind, members=node.members,
+                              binding=binding, options=self.options,
+                              lat_cycles=lats[n], index=i)
+            in_edges = [(s, r) for s, d, r in self.edges
+                        if d == n and s in names]
+            trunk = spec.alive and self._is_trunk(start, names, n)
+            stages.append((node, spec, ctx, in_edges, trunk))
+        return CompiledPipeline(start, stages)
+
+
+class CompiledPipeline:
+    """One jittable executor: run(state, carrier) -> (state, carrier)."""
+
+    def __init__(self, ingress: str, stages):
+        self.ingress = ingress
+        self.stages = stages
+
+    @property
+    def order(self) -> List[str]:
+        return [node.name for node, *_ in self.stages]
+
+    def summary(self) -> str:
+        lines = []
+        for node, _, ctx, in_edges, _trunk in self.stages:
+            srcs = ", ".join(f"{s}[{r.match}"
+                             f"{'' if r.key is None else '=' + hex(r.key)}]"
+                             for s, r in in_edges) or "(ingress)"
+            lines.append(f"{ctx.index:2d} {node.name:<12} kind={node.kind:<12}"
+                         f" lat~{ctx.lat_cycles}cyc <- {srcs}")
+        return "\n".join(lines)
+
+    # ---- state -----------------------------------------------------------
+    def init_state(self, with_telemetry: bool = True,
+                   log_entries: int = 64) -> Dict[str, Any]:
+        st: Dict[str, Any] = {}
+        for node, spec, ctx, *_ in self.stages:
+            if spec.init is not None:
+                deep_merge(st, spec.init(ctx))
+        if with_telemetry:
+            deep_merge(st, {"telemetry": {
+                "step": jnp.zeros((), jnp.int32),
+                "logs": {node.name: telemetry.make_log(log_entries)
+                         for node, *_ in self.stages},
+            }})
+        return st
+
+    # ---- execution -------------------------------------------------------
+    def run(self, state: Dict[str, Any], carrier: Dict[str, Any]):
+        state = dict(state)
+        carrier = dict(carrier)
+        carrier.setdefault("meta", {})
+        carrier.setdefault("info", {})
+        n = carrier["payload"].shape[0]
+
+        telem = state.get("telemetry")
+        if telem is not None:
+            telem = {"step": telem["step"] + 1, "logs": dict(telem["logs"])}
+            state["telemetry"] = telem
+
+        ok_of: Dict[str, jnp.ndarray] = {}
+        for node, spec, ctx, in_edges, trunk in self.stages:
+            if not in_edges:                       # ingress / chain root
+                pred = jnp.ones((n,), bool)
+            else:
+                pred = jnp.zeros((n,), bool)
+                for src, route in in_edges:
+                    pred = pred | (ok_of[src] & _match_pred(route, carrier, n))
+            carrier = dict(carrier)
+            state, carrier, ok = spec.fn(state, carrier, pred, ctx)
+            ok_of[node.name] = pred & ok if ok is not None else pred
+            if spec.alive:
+                if trunk:      # gates all traffic: alive = arrived & ok
+                    carrier["alive"] = ok_of[node.name]
+                else:          # branch tile: judge only its own packets
+                    prev = carrier.get("alive", jnp.ones((n,), bool))
+                    carrier["alive"] = jnp.where(pred, ok_of[node.name],
+                                                 prev)
+            if telem is not None and node.name in telem["logs"]:
+                row = telemetry.counter_row(
+                    telem["step"], pred.sum(dtype=jnp.int32),
+                    (pred & ~ok_of[node.name]).sum(dtype=jnp.int32),
+                    ctx.lat_cycles, ctx.index)
+                telem["logs"][node.name] = telemetry.append(
+                    telem["logs"][node.name], row, jnp.ones((1,), bool))
+        return state, carrier
+
+
+# ---------------------------------------------------------------------------
+# the generic app-group tile function (dispatch + process, paper §4.2/§5)
+
+
+def _app_init(ctx: TileContext) -> dict:
+    from repro.core.scaleout import make_dispatch
+    a = ctx.binding
+    if a is None:
+        raise CompileError(f"app group {ctx.name!r} has no binding")
+    return {"dispatch": {a.name: make_dispatch(list(range(a.n_replicas)))},
+            "apps": {a.name: a.state}}
+
+
+@register_tile("app", init=_app_init)
+def _app_group(state, carrier, pred, ctx):
+    """Replica dispatch + app processing for one app group.
+
+    `pred` IS the arrival predicate derived from the udp_port route
+    entries, so port matching lives in the topology, not here."""
+    from repro.core.scaleout import by_flow_hash, by_port, round_robin
+    a = ctx.binding
+    m = carrier["meta"]
+    at_app = pred
+
+    dispatch = dict(state["dispatch"])
+    apps = dict(state["apps"])
+    d = dispatch[a.name]
+    if a.policy == "round_robin":
+        d, replica = round_robin(d, at_app)
+    elif a.policy == "flow_hash":
+        replica = by_flow_hash(d, m)
+    else:                                          # port_match
+        replica = by_port(d, m["dst_port"], a.port)
+    dispatch[a.name] = d
+
+    ast, nb, nl = a.process(apps[a.name], carrier["body"], carrier["blen"],
+                            m, at_app, replica)
+    apps[a.name] = ast
+    state = dict(state)
+    state["dispatch"] = dispatch
+    state["apps"] = apps
+
+    carrier["out_body"] = jnp.where(at_app[:, None], nb, carrier["out_body"])
+    carrier["out_blen"] = jnp.where(at_app, nl, carrier["out_blen"])
+    info = dict(carrier["info"])
+    info[a.name] = at_app
+    carrier["info"] = info
+    return state, carrier, None

@@ -61,3 +61,29 @@ def read_entry(log: RingLog, idx) -> Tuple[RingLog, jnp.ndarray, jnp.ndarray]:
 def timestamp(step_counter) -> jnp.ndarray:
     """Cycle-timestamp analog: the runtime's step counter."""
     return step_counter.astype(jnp.int32)
+
+
+# ---- per-tile pipeline counters (compiled-executor diagnostics) -----------
+# Row layout: [step, packets_in, drops, noc_latency_cycles, tile_index, 0..]
+
+
+def counter_row(step, pkts_in, drops, lat_cycles, tile_index) -> jnp.ndarray:
+    """One (1, LOG_WIDTH) counter entry for a tile's RingLog."""
+    row = jnp.stack([
+        timestamp(step),
+        jnp.asarray(pkts_in, jnp.int32),
+        jnp.asarray(drops, jnp.int32),
+        jnp.asarray(lat_cycles, jnp.int32),
+        jnp.asarray(tile_index, jnp.int32),
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), jnp.int32),
+    ])
+    return row[None, :]
+
+
+def latest(log: RingLog, n: int = 1) -> jnp.ndarray:
+    """The last n entries, oldest first (readback convenience)."""
+    cap = log.entries.shape[0]
+    idx = (log.wr - jnp.arange(n, 0, -1)) % cap
+    return log.entries[idx]

@@ -72,6 +72,26 @@ class TopologyConfig:
     def add_chain(self, *names: str) -> None:
         self.chains.append(list(names))
 
+    def insert_on_path(self, name: str, kind: str, x: int, y: int,
+                       src: str, dst: str, noc: str = "data") -> TileDecl:
+        """Insert a tile between `src` and `dst` purely as a config edit
+        (the paper's Table-1 flexibility story): every route on `src` that
+        pointed at `dst` is re-aimed at the new tile, the new tile gets a
+        const route on to `dst`, and declared chains passing src->dst are
+        re-threaded through the new tile so the deadlock analysis stays
+        honest.  Neither endpoint's tile function is touched."""
+        t = self.add_tile(name, kind, x, y, noc)
+        for r in self.tile(src).routes:
+            if r.next_tile == dst:
+                r.next_tile = name
+        t.routes.append(RouteEntry("const", None, dst))
+        for c in self.chains:
+            for i in range(len(c) - 1):
+                if c[i] == src and c[i + 1] == dst:
+                    c.insert(i + 1, name)
+                    break
+        return t
+
     # ---- lookups -----------------------------------------------------------
     def tile(self, name: str) -> TileDecl:
         for t in self.tiles:

@@ -98,17 +98,19 @@ class Instr:
     is_root: bool = False
 
     def operand_names(self) -> List[str]:
-        # operands come before the first close-paren at depth 0
+        # operands come before the first close-paren at depth 0; newer XLA
+        # prints operand types inline (`dot(f32[32,64]{1,0} %a, ...)`), so
+        # commas inside [] / {} must not split tokens — track all brackets
         depth = 0
         out = []
         cur = []
         for ch in self.rest:
-            if ch == "(":
+            if ch in "([{":
                 depth += 1
                 cur.append(ch)
-            elif ch == ")":
-                if depth == 0:
-                    break
+            elif ch == ")" and depth == 0:
+                break
+            elif ch in ")]}":
                 depth -= 1
                 cur.append(ch)
             elif ch == "," and depth == 0:

@@ -7,19 +7,17 @@ touches jax device state.  Single pod: (data=16, model=16) = 256 chips
 """
 from __future__ import annotations
 
-import jax
+from repro.launch.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_for(devices: int, *, model_parallel: int = None):
     """Mesh for an arbitrary device count (elastic scaling / local runs)."""
     mp = model_parallel or min(16, devices)
     assert devices % mp == 0
-    return jax.make_mesh((devices // mp, mp), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((devices // mp, mp), ("data", "model"))

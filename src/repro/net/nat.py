@@ -13,6 +13,8 @@ from typing import Dict, Tuple
 
 import jax.numpy as jnp
 
+from repro.net import bytesops as B
+
 SLOTS = 8
 
 
@@ -52,3 +54,35 @@ def update(nat: Dict, slot, virt_ip, phys_ip) -> Dict:
     """Control-plane rewrite (used during live migration)."""
     return {"virt": nat["virt"].at[slot].set(jnp.uint32(virt_ip)),
             "phys": nat["phys"].at[slot].set(jnp.uint32(phys_ip))}
+
+
+def fixup_l4_checksum(payload, csum_off: int, old_ip, new_ip, mask,
+                      zero_is_disabled: bool = True):
+    """Incremental one's-complement checksum update (RFC 1624) after an IP
+    rewrite: HC' = ~(~HC + ~m + m') over the changed 16-bit words.
+
+    Rewriting an address invalidates the TCP/UDP checksum (its pseudo
+    header covers src/dst IP); real NATs patch it in place rather than
+    recompute — so do we, which keeps the NAT tile independent of where it
+    sits in the chain.  `csum_off` is the checksum's byte offset within
+    `payload` (UDP: 6, TCP: 16).  Rows where `mask` is False pass through
+    untouched; `zero_is_disabled` additionally skips checksum 0, which is
+    RFC 768's "no checksum" sentinel — a UDP-only rule (for TCP, 0 is a
+    legitimate checksum and must still be patched)."""
+    csum = B.be16(payload, csum_off).astype(jnp.uint32)
+    old_ip = old_ip.astype(jnp.uint32)
+    new_ip = new_ip.astype(jnp.uint32)
+    s = (~csum & 0xFFFF)
+    s = s + (~(old_ip >> 16) & 0xFFFF) + (~old_ip & 0xFFFF)
+    s = s + (new_ip >> 16) + (new_ip & 0xFFFF)
+    s = (s & 0xFFFF) + (s >> 16)
+    s = (s & 0xFFFF) + (s >> 16)
+    fixed = ~s & 0xFFFF
+    if zero_is_disabled:
+        # UDP: never *emit* 0 either (it would read as "no checksum" and
+        # disable verification downstream) — same 0 -> 0xFFFF mapping as a
+        # full recompute in udp.build
+        fixed = jnp.where(fixed == 0, jnp.uint32(0xFFFF), fixed)
+        mask = mask & (csum != 0)
+    out = jnp.where(mask, fixed, csum)
+    return B.set_be16(payload, csum_off, out)

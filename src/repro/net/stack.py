@@ -1,28 +1,28 @@
-"""Stack assembly: declarative topologies (the paper's XML analog) and the
-jittable RX/TX pipelines that implement them.
+"""Stack assembly: declarative topologies (the paper's XML analog) compiled
+into executable pipelines.
 
-`udp_stack()` is Figure 4: eth -> ip -> udp -> app(s) and back.  Apps are
-registered with a dispatch policy (round-robin / flow-hash / port-match);
-the topology is validated + deadlock-checked at build time, and the
-returned `UdpStack` executes the full chain on packet batches.
+`udp_topology()` is Figure 4 as *configuration*: eth -> ip -> udp -> app(s)
+and back, every hop a route entry.  `tcp_topology()` adds the TCP engine
+and the optional NAT tiles between IP and TCP (live migration, §5.3) — NAT
+is inserted by route edits alone, the paper's Table-1 flexibility claim.
 
-`tcp_stack()` adds the TCP engine and the optional NAT tiles between IP
-and TCP (live migration, §5.3) — inserted *without modifying* eth/ip/tcp,
-which is the paper's Table-1 flexibility claim.
+`UdpStack` / `TcpStack` are thin wrappers: they build (or accept) a
+topology, hand it to :class:`repro.core.compiler.StackCompiler`, and expose
+the compiled pipelines under the original rx_tx / rx / tx_frame APIs.  No
+protocol order is hardcoded here — reroute the topology (e.g. with
+``TopologyConfig.insert_on_path``) and the executor follows.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, List, Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import deadlock
-from repro.core.scaleout import (DispatchState, by_flow_hash, by_port,
-                                 make_dispatch, round_robin)
+from repro.core.compiler import StackCompiler, deep_merge
 from repro.core.topology import TopologyConfig
-from repro.net import eth, ipv4, nat as nat_mod, rpc, tcp, udp
+from repro.net import ipv4
+from repro.net import tiles as _tiles          # noqa: F401  (registers kinds)
 
 
 @dataclasses.dataclass
@@ -31,7 +31,7 @@ class AppDecl:
     port: int                  # UDP/TCP port (port-match apps: base port)
     n_replicas: int = 1
     policy: str = "round_robin"   # round_robin | flow_hash | port_match
-    # process(state, body, blen, meta, active) -> (state, body', blen')
+    # process(state, body, blen, meta, active, replica) -> (state, body', blen')
     process: Optional[Callable] = None
     state: object = None
 
@@ -44,6 +44,8 @@ def _place_apps(topo: TopologyConfig, apps: List[AppDecl], row: int):
             topo.add_tile(nm, f"app:{app.name}", x, row)
             topo.add_chain("eth_rx", "ip_rx", "udp_rx", nm,
                            "udp_tx", "ip_tx", "eth_tx")
+            # reply path: app -> udp_tx -> ip_tx -> eth_tx
+            topo.add_route(nm, "const", None, "udp_tx")
             x += 1
 
 
@@ -58,86 +60,53 @@ def udp_topology(apps: List[AppDecl], name="udp-stack") -> TopologyConfig:
     topo.add_tile("udp_tx", "udp_tx", 2, 1)
     topo.add_route("eth_rx", "ethertype", 0x0800, "ip_rx")
     topo.add_route("ip_rx", "ip_proto", ipv4.PROTO_UDP, "udp_rx")
+    topo.add_route("udp_tx", "const", None, "ip_tx")
+    topo.add_route("ip_tx", "const", None, "eth_tx")
     _place_apps(topo, apps, 0)
     for app in apps:
-        nm = f"{app.name}.0" if app.n_replicas > 1 else app.name
-        topo.add_route("udp_rx", "udp_port", app.port, nm)
+        if app.policy == "port_match":
+            # one CAM entry per shard port (paper: 'distribute work to the
+            # tiles by matching on the destination port number')
+            for r in range(app.n_replicas):
+                nm = f"{app.name}.{r}" if app.n_replicas > 1 else app.name
+                topo.add_route("udp_rx", "udp_port", app.port + r, nm)
+        else:
+            nm = f"{app.name}.0" if app.n_replicas > 1 else app.name
+            topo.add_route("udp_rx", "udp_port", app.port, nm)
     return topo
 
 
 class UdpStack:
-    """Figure-4 pipeline, jittable end to end."""
+    """Figure-4 pipeline, compiled from its topology, jittable end to end."""
 
     def __init__(self, apps: List[AppDecl], local_ip: int,
-                 check_deadlock: bool = True):
-        self.topo = udp_topology(apps)
-        errs = self.topo.validate()
-        if errs:
-            raise ValueError("\n".join(errs))
-        if check_deadlock:
-            deadlock.assert_deadlock_free(self.topo)
+                 check_deadlock: bool = True,
+                 topo: Optional[TopologyConfig] = None,
+                 nat_entries=None, with_telemetry: bool = True):
+        self.topo = topo if topo is not None else udp_topology(apps)
         self.apps = apps
         self.local_ip = local_ip
+        self.with_telemetry = with_telemetry
+        self.compiler = StackCompiler(
+            self.topo, bindings={a.name: a for a in apps},
+            options={"local_ip": local_ip, "nat_entries": nat_entries or []},
+            check_deadlock=check_deadlock)
+        self.pipeline = self.compiler.compile("eth_rx")
 
     def init_state(self):
-        st = {"dispatch": {}, "apps": {}, "rx_count": jnp.zeros((), jnp.int32)}
-        for a in self.apps:
-            st["dispatch"][a.name] = make_dispatch(list(range(a.n_replicas)))
-            st["apps"][a.name] = a.state
+        st = self.pipeline.init_state(with_telemetry=self.with_telemetry)
+        st["rx_count"] = jnp.zeros((), jnp.int32)
         return st
 
     def rx_tx(self, state, payload, length):
-        """Full chain: parse -> dispatch -> app -> build.  Returns
+        """Full compiled chain: parse -> dispatch -> app -> build.  Returns
         (state', out_payload, out_length, out_valid, info)."""
-        p, l, m = eth.parse(payload, length)
-        is_ip = m["ethertype"] == eth.ETHERTYPE_IPV4
-        p, l, m2, ok_ip = ipv4.parse(p, l)
-        m.update(m2)
-        is_udp = m["ip_proto"] == ipv4.PROTO_UDP
-        p, l, m3, ok_udp = udp.parse(p, l, m)
-        m = m3
-        alive = is_ip & ok_ip & is_udp & ok_udp
-
-        body, blen, rmeta, ok_rpc = rpc.parse(p, l)
-        m.update(rmeta)
-        alive &= ok_rpc
-
-        out_body = body
-        out_blen = blen
-        info = {}
-        for a in self.apps:
-            at_app = alive & (m["dst_port"] == a.port) if a.policy != \
-                "port_match" else alive & (m["dst_port"] >= a.port) & \
-                (m["dst_port"] < a.port + a.n_replicas)
-            d = state["dispatch"][a.name]
-            if a.policy == "round_robin":
-                d, replica_tile = round_robin(d, at_app)
-            elif a.policy == "flow_hash":
-                replica_tile = by_flow_hash(d, m)
-            else:
-                replica_tile = by_port(d, m["dst_port"], a.port)
-            state["dispatch"][a.name] = d
-            ast = state["apps"][a.name]
-            ast, nb, nl = a.process(ast, body, blen, m,
-                                    at_app, replica_tile)
-            state["apps"][a.name] = ast
-            out_body = jnp.where(at_app[:, None], nb, out_body)
-            out_blen = jnp.where(at_app, nl, out_blen)
-            info[a.name] = at_app
-
-        # TX chain: rpc -> udp -> ip -> eth with swapped fields
-        q, ql = rpc.build(out_body, out_blen, m["msg_type"], m["req_id"])
-        mtx = dict(m)
-        mtx["src_ip"], mtx["dst_ip"] = m["dst_ip"], m["src_ip"]
-        mtx["src_port"], mtx["dst_port"] = m["dst_port"], m["src_port"]
-        mtx["ip_proto"] = jnp.full_like(m["src_ip"], ipv4.PROTO_UDP)
-        q, ql = udp.build(q, ql, mtx)
-        q, ql = ipv4.build(q, ql, mtx)
-        mtx["eth_dst_hi"], mtx["eth_dst_lo"] = m["eth_src_hi"], m["eth_src_lo"]
-        mtx["eth_src_hi"], mtx["eth_src_lo"] = m["eth_dst_hi"], m["eth_dst_lo"]
-        q, ql = eth.build(q, ql, mtx)
-        state["rx_count"] = state["rx_count"] + alive.sum(dtype=jnp.int32)
-        return state, q, ql, alive, info
+        state, carrier = self.pipeline.run(
+            state, {"payload": payload, "length": length})
+        state["rx_count"] = state["rx_count"] + \
+            carrier["alive"].sum(dtype=jnp.int32)
+        return (state, carrier["tx_payload"], carrier["tx_len"],
+                carrier["alive"], carrier["info"])
 
 
 # ---------------------------------------------------------------------------
@@ -150,14 +119,15 @@ def tcp_topology(with_nat: bool = False, name="tcp-stack") -> TopologyConfig:
     topo.add_tile("ip_rx", "ip_rx", 1, 0)
     x = 2
     if with_nat:
-        topo.add_tile("nat_rx", "nat", 2, 0)
-        topo.add_tile("nat_tx", "nat", 2, 1)
+        topo.add_tile("nat_rx", "nat_rx", 2, 0)
+        topo.add_tile("nat_tx", "nat_tx", 2, 1)
         x = 3
     topo.add_tile("tcp_rx", "tcp_rx", x, 0)
     topo.add_tile("tcp_tx", "tcp_tx", x, 1)
     topo.add_tile("ip_tx", "ip_tx", 1, 1)
     topo.add_tile("eth_tx", "eth_tx", 0, 1)
     topo.add_tile("ctrl", "controller", x + 1, 1, noc="ctrl")
+    topo.add_route("eth_rx", "ethertype", 0x0800, "ip_rx")
     if with_nat:
         topo.add_chain("eth_rx", "ip_rx", "nat_rx", "tcp_rx",
                        "tcp_tx", "nat_tx", "ip_tx", "eth_tx")
@@ -174,50 +144,46 @@ def tcp_topology(with_nat: bool = False, name="tcp-stack") -> TopologyConfig:
 
 
 class TcpStack:
-    """TCP stack with optional NAT tiles for live migration."""
+    """TCP stack with optional NAT tiles for live migration.  The RX chain
+    and the TX build chain are both compiled from the topology's routes."""
 
     def __init__(self, local_ip: int, with_nat: bool = False,
-                 nat_entries=None, max_conns: int = 16):
-        self.topo = tcp_topology(with_nat)
-        deadlock.assert_deadlock_free(self.topo)
+                 nat_entries=None, max_conns: int = 16,
+                 topo: Optional[TopologyConfig] = None,
+                 with_telemetry: bool = True):
+        self.topo = topo if topo is not None else tcp_topology(with_nat)
         self.with_nat = with_nat
         self.local_ip = local_ip
         self.max_conns = max_conns
         self.nat_entries = nat_entries or []
+        self.with_telemetry = with_telemetry
+        self.compiler = StackCompiler(
+            self.topo, options={"local_ip": local_ip, "max_conns": max_conns,
+                                "nat_entries": self.nat_entries})
+        self.rx_pipe = self.compiler.compile("eth_rx")
+        self.tx_pipe = self.compiler.compile("tcp_tx")
 
     def init_state(self):
-        st = {"conn": tcp.init(self.max_conns, local_ip=self.local_ip)}
-        if self.with_nat:
-            st["nat"] = nat_mod.init(self.nat_entries)
+        st = self.rx_pipe.init_state(with_telemetry=self.with_telemetry)
+        # the TX chain gets no RingLogs: tx_frame returns only the built
+        # frame (original API), so TX-side log writes could never persist —
+        # telemetry covers the RX path
+        deep_merge(st, self.tx_pipe.init_state(with_telemetry=False))
         return st
 
     def rx(self, state, payload, length):
         """RX chain through optional NAT into the TCP engine.  Returns
         (state', responses) — responses are reply-segment field batches."""
-        p, l, m = eth.parse(payload, length)
-        p, l, m2, ok = ipv4.parse(p, l)
-        m.update(m2)
-        if self.with_nat:
-            m, _ = nat_mod.rx(state["nat"], m)
-        data, dlen, m = tcp.parse_segment(p, l, m)
-        conn, resps = tcp.rx_batch(state["conn"], data, dlen, m)
-        state = dict(state)
-        state["conn"] = conn
-        return state, resps
+        state, carrier = self.rx_pipe.run(
+            state, {"payload": payload, "length": length})
+        return state, carrier["tcp_resps"]
 
     def tx_frame(self, state, seg_meta, data, dlen):
         """Build one TX frame from an emitted segment (through NAT)."""
-        m = dict(seg_meta)
-        if self.with_nat:
-            m, _ = nat_mod.tx(state["nat"], m)
-        B = data.shape[0] if data.ndim > 1 else 1
         payload = data.reshape(1, -1) if data.ndim == 1 else data
-        q, ql = tcp.build_segment(
-            payload, dlen.reshape(1) if dlen.ndim == 0 else dlen,
-            {k: (v.reshape(1) if v.ndim == 0 else v) for k, v in m.items()
-             if k in ("src_ip", "dst_ip", "src_port", "dst_port", "tcp_seq",
-                      "tcp_ack", "tcp_flags", "tcp_wnd")})
-        mm = {k: (v.reshape(1) if v.ndim == 0 else v) for k, v in m.items()}
-        mm["ip_proto"] = jnp.full((q.shape[0],), ipv4.PROTO_TCP, jnp.uint32)
-        q, ql = ipv4.build(q, ql, mm)
-        return q, ql
+        dl = dlen.reshape(1) if dlen.ndim == 0 else dlen
+        mm = {k: (v.reshape(1) if v.ndim == 0 else v)
+              for k, v in seg_meta.items()}
+        _, carrier = self.tx_pipe.run(
+            state, {"payload": payload, "length": dl, "meta": mm})
+        return carrier["tx_payload"], carrier["tx_len"]

@@ -1,0 +1,195 @@
+"""Registered tile functions for every protocol element.
+
+Importing this module populates the :mod:`repro.core.compiler` registry:
+each tile *kind* that can appear in a TopologyConfig maps to one jittable
+function here.  The compiler wires them together from the declared routes —
+none of these functions knows what comes before or after it in the chain,
+which is exactly the paper's tile-independence property (insert NAT or
+IP-in-IP between any two tiles without touching either).
+
+Carrier keys (RX direction): ``payload``/``length`` (current packet view),
+``meta`` (accumulated header fields), ``alive`` (RX-chain conjunction,
+maintained by the executor), ``body``/``blen`` (RPC body for apps),
+``out_body``/``out_blen`` (app-modified reply body).  TX direction:
+``tx_payload``/``tx_len``/``tx_meta`` and ``tx_csum_offset`` (where the L4
+checksum lives, for NAT's incremental fixup).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.compiler import register_tile
+from repro.net import eth, ipinip, ipv4, nat as nat_mod, rpc, tcp, udp
+
+# ---------------------------------------------------------------------------
+# RX protocol tiles
+
+
+@register_tile("eth_rx", alive=True)
+def eth_rx(state, carrier, pred, ctx):
+    p, l, m = eth.parse(carrier["payload"], carrier["length"])
+    carrier.update(payload=p, length=l, meta=m)
+    return state, carrier, None
+
+
+@register_tile("ip_rx", alive=True)
+def ip_rx(state, carrier, pred, ctx):
+    p, l, m2, ok = ipv4.parse(carrier["payload"], carrier["length"])
+    m = dict(carrier["meta"])
+    m.update(m2)
+    carrier.update(payload=p, length=l, meta=m)
+    return state, carrier, ok
+
+
+@register_tile("udp_rx", alive=True)
+def udp_rx(state, carrier, pred, ctx):
+    """UDP parse + RPC deframing (the app-facing boundary of the paper's
+    UDP tile: apps receive framed request bodies, not raw datagrams)."""
+    p, l, m, ok_udp = udp.parse(carrier["payload"], carrier["length"],
+                                carrier["meta"])
+    body, blen, rmeta, ok_rpc = rpc.parse(p, l)
+    m = dict(m)
+    m.update(rmeta)
+    carrier.update(payload=p, length=l, meta=m, body=body, blen=blen,
+                   out_body=body, out_blen=blen)
+    return state, carrier, ok_udp & ok_rpc
+
+
+def _nat_init(ctx):
+    return {"nat": nat_mod.init(ctx.options.get("nat_entries"))}
+
+
+@register_tile("nat_rx", init=_nat_init, alive=True)
+def nat_rx(state, carrier, pred, ctx):
+    """Virtual dst -> physical dst, patching the L4 checksum in place so
+    downstream verification still passes (RFC 1624 incremental update)."""
+    m = carrier["meta"]
+    old_dst = m["dst_ip"]
+    m2, found = nat_mod.rx(state["nat"], m)
+    p = carrier["payload"]
+    proto = m["ip_proto"]
+    p = nat_mod.fixup_l4_checksum(p, 6, old_dst, m2["dst_ip"],
+                                  found & (proto == ipv4.PROTO_UDP))
+    p = nat_mod.fixup_l4_checksum(p, 16, old_dst, m2["dst_ip"],
+                                  found & (proto == ipv4.PROTO_TCP),
+                                  zero_is_disabled=False)
+    carrier.update(payload=p, meta=m2)
+    return state, carrier, None
+
+
+@register_tile("ipinip_decap", alive=True)
+def ipinip_decap(state, carrier, pred, ctx):
+    """Strip the outer header; a *duplicated* ip_rx tile must sit
+    downstream to parse the inner packet (paper §3.5)."""
+    p, l, ok = ipinip.decap(carrier["payload"], carrier["length"],
+                            carrier["meta"])
+    carrier.update(payload=p, length=l)
+    return state, carrier, ok
+
+
+def _tcp_init(ctx):
+    return {"conn": tcp.init(ctx.options.get("max_conns", 16),
+                             local_ip=ctx.options["local_ip"])}
+
+
+@register_tile("tcp_rx", init=_tcp_init)
+def tcp_rx(state, carrier, pred, ctx):
+    """Parse segments and drive the connection-table engine.  Processes the
+    whole batch in arrival order (the engine's lookup drops non-matching
+    segments itself, like the hardware tile)."""
+    data, dlen, m = tcp.parse_segment(carrier["payload"], carrier["length"],
+                                      carrier["meta"])
+    conn, resps = tcp.rx_batch(state["conn"], data, dlen, m)
+    state = dict(state)
+    state["conn"] = conn
+    carrier.update(meta=m, tcp_resps=resps)
+    return state, carrier, None
+
+
+# ---------------------------------------------------------------------------
+# TX protocol tiles
+
+
+@register_tile("udp_tx")
+def udp_tx(state, carrier, pred, ctx):
+    """RPC re-framing + UDP build with reply-swapped addressing."""
+    m = carrier["meta"]
+    q, ql = rpc.build(carrier["out_body"], carrier["out_blen"],
+                      m["msg_type"], m["req_id"])
+    mtx = dict(m)
+    mtx["src_ip"], mtx["dst_ip"] = m["dst_ip"], m["src_ip"]
+    mtx["src_port"], mtx["dst_port"] = m["dst_port"], m["src_port"]
+    mtx["ip_proto"] = jnp.full_like(m["src_ip"], ipv4.PROTO_UDP)
+    q, ql = udp.build(q, ql, mtx)
+    carrier.update(tx_payload=q, tx_len=ql, tx_meta=mtx, tx_csum_offset=6)
+    return state, carrier, None
+
+
+@register_tile("tcp_tx")
+def tcp_tx(state, carrier, pred, ctx):
+    """Build one batch of TCP segments from engine-emitted metadata (the
+    wrapper seeds carrier meta from tx_emit's segment fields)."""
+    m = carrier["meta"]
+    q, ql = tcp.build_segment(
+        carrier["payload"], carrier["length"],
+        {k: v for k, v in m.items()
+         if k in ("src_ip", "dst_ip", "src_port", "dst_port", "tcp_seq",
+                  "tcp_ack", "tcp_flags", "tcp_wnd")})
+    mtx = dict(m)
+    mtx["ip_proto"] = jnp.full((q.shape[0],), ipv4.PROTO_TCP, jnp.uint32)
+    carrier.update(tx_payload=q, tx_len=ql, tx_meta=mtx, tx_csum_offset=16)
+    return state, carrier, None
+
+
+@register_tile("nat_tx", init=_nat_init)
+def nat_tx(state, carrier, pred, ctx):
+    """Physical src -> virtual src on the reply path, with the same
+    incremental L4-checksum patch (the client must see a checksum valid
+    for the virtual address)."""
+    mtx = carrier["tx_meta"]
+    old_src = mtx["src_ip"]
+    mtx, found = nat_mod.tx(state["nat"], mtx)
+    off = carrier.get("tx_csum_offset")
+    if off is not None:
+        carrier["tx_payload"] = nat_mod.fixup_l4_checksum(
+            carrier["tx_payload"], off, old_src, mtx["src_ip"], found,
+            zero_is_disabled=(off == 6))       # 0-skip is UDP-only
+    carrier["tx_meta"] = mtx
+    return state, carrier, None
+
+
+@register_tile("ipinip_encap")
+def ipinip_encap(state, carrier, pred, ctx):
+    """Wrap the built packet in an outer IPv4 header toward the physical
+    host (the other network-virtualization option, paper §4.5)."""
+    q, ql = ipinip.encap(carrier["tx_payload"], carrier["tx_len"],
+                         carrier["tx_meta"], ctx.options["outer_src"],
+                         ctx.options["outer_dst"])
+    carrier.update(tx_payload=q, tx_len=ql, tx_csum_offset=None)
+    return state, carrier, None
+
+
+@register_tile("ip_tx")
+def ip_tx(state, carrier, pred, ctx):
+    q, ql = ipv4.build(carrier["tx_payload"], carrier["tx_len"],
+                       carrier["tx_meta"])
+    carrier.update(tx_payload=q, tx_len=ql)
+    return state, carrier, None
+
+
+@register_tile("eth_tx")
+def eth_tx(state, carrier, pred, ctx):
+    m = carrier["meta"]
+    mtx = dict(carrier["tx_meta"])
+    mtx["eth_dst_hi"], mtx["eth_dst_lo"] = m["eth_src_hi"], m["eth_src_lo"]
+    mtx["eth_src_hi"], mtx["eth_src_lo"] = m["eth_dst_hi"], m["eth_dst_lo"]
+    q, ql = eth.build(carrier["tx_payload"], carrier["tx_len"], mtx)
+    carrier.update(tx_payload=q, tx_len=ql)
+    return state, carrier, None
+
+
+@register_tile("controller")
+def controller(state, carrier, pred, ctx):
+    """Control-plane tiles live on the ctrl NoC; on the data path they are
+    inert (commands arrive via control.controller_apply)."""
+    return state, carrier, None

@@ -55,9 +55,9 @@ def compressed_psum_pod(grads, residuals, mesh, pod_axis: str = "pod"):
             return (qs.astype(jnp.float32) * (ss / n) / n).astype(g.dtype), \
                 new_r
         spec = P()  # grads replicated across pod; shard_map over pod only
-        return jax.shard_map(body, mesh=mesh, in_specs=(spec, spec),
-                             out_specs=(spec, spec),
-                             check_vma=False)(g, r)
+        from repro.launch.compat import shard_map
+        return shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                         out_specs=(spec, spec))(g, r)
 
     flat_g, treedef = jax.tree_util.tree_flatten(grads)
     flat_r, _ = jax.tree_util.tree_flatten(residuals)

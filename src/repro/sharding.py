@@ -51,10 +51,11 @@ class Policy:
     def axis_size(self, name: Optional[str]) -> int:
         if not self.enabled or name is None:
             return 1
-        mesh = jax.sharding.get_abstract_mesh()
+        from repro.launch.compat import get_context_mesh
+        mesh = get_context_mesh()
         if mesh is None or mesh.empty:  # pragma: no cover - defensive
             return 1
-        return mesh.shape.get(name, 1)
+        return dict(mesh.shape).get(name, 1)
 
     def tp_size(self) -> int:
         return self.axis_size(self.tp)

@@ -1,0 +1,80 @@
+"""Degrade gracefully when `hypothesis` is not installed.
+
+Property-based tests import ``given / settings / st`` from here instead of
+from hypothesis directly.  When hypothesis is available we re-export it
+untouched.  When it is missing, a small deterministic fallback runs each
+property over a fixed set of pseudo-random examples (seeded, so failures
+reproduce) — the properties still execute and the suite stays green, it
+just loses hypothesis's shrinking and adversarial generation.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        """Deterministic stand-ins for the strategies the suite uses."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def binary(min_size=0, max_size=64):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return bytes(rng.getrandbits(8) for _ in range(n))
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=8):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elem.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_kwargs):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0xBEE5)
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", _DEFAULT_EXAMPLES))
+                for _ in range(n):
+                    drawn = [s.example(rng) for s in strategies]
+                    fn(*args, *drawn, **kwargs)
+            # hide the property's drawn parameters from pytest's fixture
+            # resolution (it would otherwise look for fixtures named after
+            # them); the wrapper itself takes nothing
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return deco

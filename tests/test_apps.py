@@ -127,6 +127,7 @@ def small_engine():
     return cfg, params
 
 
+@pytest.mark.slow
 def test_engine_matches_plain_decode(small_engine):
     cfg, params = small_engine
     eng = ServeEngine(cfg, params, max_sessions=2, max_seq=32)
@@ -155,6 +156,7 @@ def test_engine_matches_plain_decode(small_engine):
     assert got == want
 
 
+@pytest.mark.slow
 def test_session_migration_between_engines(small_engine):
     cfg, params = small_engine
     a = ServeEngine(cfg, params, max_sessions=2, max_seq=32)
@@ -173,6 +175,7 @@ def test_session_migration_between_engines(small_engine):
     assert first + rest == ref_all
 
 
+@pytest.mark.slow
 def test_lm_rpc_app_roundtrip(small_engine):
     cfg, params = small_engine
     app = LmServerApp(ServeEngine(cfg, params, max_sessions=2, max_seq=32))

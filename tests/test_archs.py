@@ -10,6 +10,8 @@ import pytest
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.configs.shapes import SHAPES, applicable, grid
 from repro.models import model
+
+pytestmark = pytest.mark.slow
 from repro.optim import adamw
 
 

@@ -10,19 +10,21 @@ import pytest
 # These tests need >1 device; run them in a subprocess with forced host
 # devices so the rest of the suite keeps seeing 1 device.
 
+pytestmark = pytest.mark.slow
+
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.compat import make_mesh, set_mesh
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("pod", "data"))
 
 # --- compressed cross-pod psum -------------------------------------------
 from repro.optim import compress
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     g = jax.random.normal(jax.random.key(0), (64,))
     r = jnp.zeros((64,))
     out, new_r = compress.compressed_psum_pod({"w": g}, {"w": r}, mesh)
@@ -50,9 +52,8 @@ batch = {"tokens": jax.random.randint(jax.random.key(1), (8, 16), 0, cfg.vocab),
 single = make_train_step(cfg, Policy())
 p1, o1, m1 = jax.jit(single)(params, opt, batch)
 
-mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
-with jax.set_mesh(mesh2):
+mesh2 = make_mesh((4, 2), ("data", "model"))
+with set_mesh(mesh2):
     pol = make_policy(mesh2)
     sharded = make_train_step(cfg, pol)
     p2, o2, m2 = jax.jit(sharded)(params, opt, batch)

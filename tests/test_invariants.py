@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.configs import get_smoke_config
 from repro.core.noc import chain_channels, dor_path
@@ -19,6 +19,7 @@ from repro.net import bytesops as B
 
 @settings(max_examples=5, deadline=None)
 @given(st.integers(0, 2**31 - 1))
+@pytest.mark.slow
 def test_causality_future_does_not_affect_past(seed):
     """Changing token t+1.. must not change logits at positions <= t."""
     cfg = get_smoke_config("internlm2-1.8b")
@@ -35,6 +36,7 @@ def test_causality_future_does_not_affect_past(seed):
 
 @settings(max_examples=5, deadline=None)
 @given(st.integers(0, 2**31 - 1))
+@pytest.mark.slow
 def test_ssm_causality(seed):
     cfg = get_smoke_config("falcon-mamba-7b")
     params = model.init_params(cfg, jax.random.key(0))
@@ -50,6 +52,7 @@ def test_ssm_causality(seed):
 
 @settings(max_examples=8, deadline=None)
 @given(st.integers(1, 64), st.integers(1, 4), st.integers(16, 64))
+@pytest.mark.slow
 def test_linear_recurrence_matches_loop(S, B_, D):
     """Chunked associative scan == naive sequential recurrence."""
     key = jax.random.key(S * 131 + B_ * 7 + D)

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.kernels.checksum.kernel import checksum_pallas
 from repro.kernels.checksum.ref import checksum_ref
@@ -22,6 +22,7 @@ from repro.kernels.rs_encode.ref import rs_encode_np
 
 @pytest.mark.parametrize("k,p", [(8, 2), (4, 2), (10, 4), (6, 3)])
 @pytest.mark.parametrize("n", [4096, 16384])
+@pytest.mark.slow
 def test_rs_encode_sweep(k, p, n):
     rng = np.random.default_rng(k * 100 + p)
     data = rng.integers(0, 256, (k, n), dtype=np.uint8)
@@ -85,6 +86,7 @@ def test_checksum_property_verifies_to_zero(data):
     (512, 64, 4, 2, 64),
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.slow
 def test_flash_attention_sweep(S, hd, kv, g, window, dtype):
     B = 2
     key = jax.random.key(S + hd)
@@ -117,6 +119,7 @@ def test_flash_attention_bidirectional():
 
 
 @pytest.mark.parametrize("S,D,N", [(256, 64, 8), (512, 128, 16), (256, 32, 4)])
+@pytest.mark.slow
 def test_mamba_scan_sweep(S, D, N):
     B = 2
     key = jax.random.key(S * D)

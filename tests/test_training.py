@@ -26,6 +26,7 @@ def small_setup(tmpdir, total=30, arch="qwen1.5-0.5b"):
     return Trainer(cfg, tcfg, dcfg)
 
 
+@pytest.mark.slow
 def test_loss_decreases(tmp_path):
     tr = small_setup(tmp_path)
     out = tr.run()
@@ -34,6 +35,7 @@ def test_loss_decreases(tmp_path):
     assert log[-1]["loss"] < log[0]["loss"] * 0.9
 
 
+@pytest.mark.slow
 def test_resume_is_bit_exact(tmp_path):
     tr1 = small_setup(tmp_path / "a")
     tr1.run(steps=20)
@@ -54,8 +56,8 @@ def test_elastic_restore_changes_layout(tmp_path):
     tr.save(sync=True)
     # restore with explicit shardings (single device -> same values)
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.compat import make_mesh
+    mesh = make_mesh((1,), ("data",))
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), tr.state_tree())
     state = ckpt.restore(tr.tcfg.ckpt_dir, tr.state_tree(), shardings=sh)
     chk = jax.tree.leaves(state["params"])[0]
@@ -100,6 +102,7 @@ def test_grad_compression_error_feedback_converges():
     assert float(err) < 0.05
 
 
+@pytest.mark.slow
 def test_preemption_checkpoint(tmp_path):
     tr = small_setup(tmp_path)
     tr.run(steps=7)
