@@ -7,10 +7,11 @@
 #   make bench       the paper-benchmark battery
 
 PY ?= python
-PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+# src for the repro package, the repo root for the benchmarks package
+PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test-fast test bench
+.PHONY: test-fast test bench bench-mgmt
 
 test-fast:
 	$(PY) -m pytest -q -m "not slow"
@@ -20,3 +21,8 @@ test:
 
 bench:
 	$(PY) benchmarks/run.py
+
+# management-plane contention regression check (paper: control traffic
+# never contends with the dataplane)
+bench-mgmt:
+	$(PY) benchmarks/bench_mgmt.py

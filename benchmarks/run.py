@@ -7,13 +7,14 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_flexibility, bench_lm, bench_migration,
-                            bench_rs, bench_tcp, bench_udp_echo,
-                            bench_vr, bench_resources)
+    from benchmarks import (bench_flexibility, bench_lm, bench_mgmt,
+                            bench_migration, bench_rs, bench_tcp,
+                            bench_udp_echo, bench_vr, bench_resources)
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_flexibility, bench_udp_echo, bench_tcp, bench_rs,
-                bench_vr, bench_migration, bench_resources, bench_lm):
+                bench_vr, bench_migration, bench_mgmt, bench_resources,
+                bench_lm):
         try:
             mod.run()
         except Exception:

@@ -49,7 +49,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
-from repro.core import deadlock, telemetry
+from repro.core import deadlock, routing, telemetry
 from repro.core.noc import chain_latency_cycles
 from repro.core.topology import RouteEntry, TileDecl, TopologyConfig
 
@@ -108,6 +108,8 @@ class TileContext:
     options: Dict[str, Any]     # compiler-level options (local_ip, ...)
     lat_cycles: int             # NoC latency estimate from the ingress
     index: int                  # execution position
+    pipe: Any = None            # pipeline-level meta (order/groups/tables) —
+                                # management tiles address peers through it
 
 
 # ---------------------------------------------------------------------------
@@ -284,6 +286,25 @@ class StackCompiler:
         names = self._reachable(start)
         order = self._topo_order(names)
         lats = self._latency_estimates(start, names)
+        index_of = {n: i for i, n in enumerate(order)}
+
+        # runtime route tables (the paper's runtime-rewritable CAMs): every
+        # keyed route entry becomes a slot in a per-(source, match-space)
+        # table held in state, so the control plane can rewrite dispatch
+        # without recompiling.  Values are execution-node indices.
+        table_entries: Dict[str, List[Tuple[int, int]]] = {}
+        for s, d, r in self.edges:
+            if (s in index_of and d in index_of and r.key is not None
+                    and r.match in _MATCH_FIELD):
+                table_entries.setdefault(f"{s}:{r.match}", []).append(
+                    (r.key, index_of[d]))
+
+        pipe_meta = {
+            "order": order,
+            "groups": [n for n in order
+                       if self.nodes[n].kind.startswith("app:")],
+            "tables": sorted(table_entries),
+        }
 
         stages = []
         for i, n in enumerate(order):
@@ -292,20 +313,26 @@ class StackCompiler:
             binding = self.bindings.get(n, self.bindings.get(node.kind))
             ctx = TileContext(name=n, kind=node.kind, members=node.members,
                               binding=binding, options=self.options,
-                              lat_cycles=lats[n], index=i)
+                              lat_cycles=lats[n], index=i, pipe=pipe_meta)
             in_edges = [(s, r) for s, d, r in self.edges
                         if d == n and s in names]
             trunk = spec.alive and self._is_trunk(start, names, n)
             stages.append((node, spec, ctx, in_edges, trunk))
-        return CompiledPipeline(start, stages)
+        return CompiledPipeline(start, stages, table_entries, pipe_meta)
 
 
 class CompiledPipeline:
     """One jittable executor: run(state, carrier) -> (state, carrier)."""
 
-    def __init__(self, ingress: str, stages):
+    def __init__(self, ingress: str, stages, table_entries=None,
+                 pipe_meta=None):
         self.ingress = ingress
         self.stages = stages
+        self.table_entries = table_entries or {}
+        self.pipe_meta = pipe_meta or {"order": self.order, "groups": [],
+                                       "tables": []}
+        self._index = {node.name: i
+                       for i, (node, *_) in enumerate(self.stages)}
 
     @property
     def order(self) -> List[str]:
@@ -328,6 +355,10 @@ class CompiledPipeline:
         for node, spec, ctx, *_ in self.stages:
             if spec.init is not None:
                 deep_merge(st, spec.init(ctx))
+        if self.table_entries:
+            deep_merge(st, {"routes": {
+                t: routing.make_table(ents)
+                for t, ents in self.table_entries.items()}})
         if with_telemetry:
             deep_merge(st, {"telemetry": {
                 "step": jnp.zeros((), jnp.int32),
@@ -349,6 +380,7 @@ class CompiledPipeline:
             telem = {"step": telem["step"] + 1, "logs": dict(telem["logs"])}
             state["telemetry"] = telem
 
+        routes_rt = state.get("routes")
         ok_of: Dict[str, jnp.ndarray] = {}
         for node, spec, ctx, in_edges, trunk in self.stages:
             if not in_edges:                       # ingress / chain root
@@ -356,7 +388,19 @@ class CompiledPipeline:
             else:
                 pred = jnp.zeros((n,), bool)
                 for src, route in in_edges:
-                    pred = pred | (ok_of[src] & _match_pred(route, carrier, n))
+                    tname = f"{src}:{route.match}"
+                    if (route.key is not None and route.match in _MATCH_FIELD
+                            and routes_rt is not None
+                            and tname in routes_rt):
+                        # live CAM lookup: the control plane can rewrite
+                        # this table between batches (paper §4.2)
+                        field = carrier["meta"][_MATCH_FIELD[route.match]]
+                        nxt = routes_rt[tname].lookup(
+                            field.astype(jnp.int32))
+                        hit = nxt == self._index[node.name]
+                    else:
+                        hit = _match_pred(route, carrier, n)
+                    pred = pred | (ok_of[src] & hit)
             carrier = dict(carrier)
             state, carrier, ok = spec.fn(state, carrier, pred, ctx)
             ok_of[node.name] = pred & ok if ok is not None else pred
@@ -374,6 +418,25 @@ class CompiledPipeline:
                     ctx.lat_cycles, ctx.index)
                 telem["logs"][node.name] = telemetry.append(
                     telem["logs"][node.name], row, jnp.ones((1,), bool))
+
+        # ---- post-batch table commit (management plane) ------------------
+        # A management tile stages table writes in the carrier; they are
+        # committed here, after every stage has run, so a command always
+        # takes effect on the *next* batch — live reconfiguration with no
+        # recompile and no intra-batch ordering hazards (paper §3.6).
+        staged = carrier.get("mgmt_staged")
+        if staged is not None:
+            if staged.get("nat") is not None and "nat" in state:
+                state["nat"] = staged["nat"]
+            if staged.get("healthy") and "dispatch" in state:
+                disp = dict(state["dispatch"])
+                for gname, h in staged["healthy"].items():
+                    # only the control-owned field: the batch's rr_counter
+                    # advances stay intact
+                    disp[gname] = dataclasses.replace(disp[gname], healthy=h)
+                state["dispatch"] = disp
+            if staged.get("routes") is not None:
+                state["routes"] = staged["routes"]
         return state, carrier
 
 

@@ -14,9 +14,17 @@ Here the control plane is modeled as:
 Command encoding (RPC payload, all big-endian u32):
   [op, target_tile_id, a, b, c]
   op: 1 = NAT_SET    (a=slot, b=virtual_ip, c=physical_ip)
-      2 = ROUTE_SET  (a=slot, b=match_key,  c=next_tile_id)
-      3 = HEALTH_SET (a=replica_idx, b=0|1)
-      4 = LOG_READ   (a=log_id, b=entry_idx)
+      2 = ROUTE_SET  (target=table_id, a=slot, b=match_key, c=next_node)
+      3 = HEALTH_SET (target=dispatch_group, a=replica_idx, b=0|1)
+      4 = LOG_READ   (a=log_id, b=entry_age; 0 = newest)
+      5 = VERSION    (read the convergence counter, no mutation)
+
+Response encoding (RPC payload, all big-endian u32, fixed 8 words):
+  [op, version, status, w0, w1, w2, w3, w4]
+  status: writes -> 1 applied / 0 rejected; LOG_READ -> 1 served /
+  0 dropped (request buffer full — re-request); VERSION -> 1.
+  For LOG_READ, w0..w4 carry the telemetry counter row
+  [step, packets_in, drops, noc_latency_cycles, tile_index].
 """
 from __future__ import annotations
 
@@ -26,10 +34,18 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import telemetry
+
 OP_NAT_SET = 1
 OP_ROUTE_SET = 2
 OP_HEALTH_SET = 3
 OP_LOG_READ = 4
+OP_VERSION = 5
+
+CMD_WORDS = 5
+CMD_BYTES = 4 * CMD_WORDS
+RESP_WORDS = 8
+RESP_BYTES = 4 * RESP_WORDS
 
 
 @jax.tree_util.register_dataclass
@@ -108,3 +124,38 @@ def controller_apply(ctrl: ControllerState, cmd,
     )
     ack = (jnp.uint32(0xAC0000) | ctrl.version.astype(jnp.uint32))
     return ctrl, new_tables, ack
+
+
+# ---------------------------------------------------------------------------
+# in-band response encoding + telemetry readback servicing (paper §4.6) —
+# used by the management tile (repro.mgmt.plane) compiled into the stack
+
+
+def encode_response(op, version, status,
+                    entry_words=None) -> jnp.ndarray:
+    """One (RESP_WORDS,) uint32 management-response payload."""
+    if entry_words is None:
+        entry_words = jnp.zeros((5,), jnp.uint32)
+    head = jnp.stack([jnp.asarray(op).astype(jnp.uint32),
+                      jnp.asarray(version).astype(jnp.uint32),
+                      jnp.asarray(status).astype(jnp.uint32)])
+    return jnp.concatenate([head, entry_words.astype(jnp.uint32)])
+
+
+def serve_log_read(entries, wrs, fills, log_id, age, want):
+    """Serve one LOG_READ against the stacked per-tile RingLogs.
+
+    entries: (T, N, LOG_WIDTH) int32, wrs: (T,) int32 write counters,
+    fills: (T,) int32 request-buffer fills.  Returns (fills', row, accepted)
+    where row is the (5,) uint32 counter prefix [step, packets_in, drops,
+    noc_latency, tile_index].  A request finding its log's REQ_BUF full is
+    dropped (accepted=False) — the client re-requests, paper semantics."""
+    t, n, _ = entries.shape
+    li = jnp.clip(log_id, 0, t - 1)
+    in_range = (log_id >= 0) & (log_id < t)
+    accepted = want & in_range & (fills[li] < telemetry.REQ_BUF)
+    fills = fills.at[li].add(accepted.astype(jnp.int32))
+    eidx = jnp.mod(wrs[li] - 1 - age, n)
+    row = entries[li, eidx][:5].astype(jnp.uint32)
+    row = jnp.where(accepted, row, jnp.zeros_like(row))
+    return fills, row, accepted

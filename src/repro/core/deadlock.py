@@ -39,13 +39,21 @@ class DeadlockReport:
 
 
 def analyze(topo: TopologyConfig, noc: str = "data") -> DeadlockReport:
+    """Per-NoC analysis: each NoC has its own physical channels (paper
+    §3.6 — the management NoC is a separate, narrower mesh), so only the
+    chains whose tiles live on `noc` contribute to its dependency graph.
+    Control chains can therefore never deadlock a dataplane chain, and
+    vice versa."""
     errors = topo.validate()
     if errors:
         raise ValueError("invalid topology:\n" + "\n".join(errors))
 
+    noc_of = {t.name: t.noc for t in topo.tiles}
     g = nx.DiGraph()
     self_conflicts = []
     for chain, channels in topo.chain_channel_lists():
+        if any(noc_of.get(n, "data") != noc for n in chain):
+            continue
         seen = set()
         for ch in channels:
             if ch in seen:
@@ -61,9 +69,12 @@ def analyze(topo: TopologyConfig, noc: str = "data") -> DeadlockReport:
 
 
 def assert_deadlock_free(topo: TopologyConfig) -> None:
-    rep = analyze(topo)
-    if not rep.ok:
-        raise RuntimeError(
-            f"topology {topo.name!r} can deadlock:\n{rep.summary()}\n"
-            "Re-place tiles so chains acquire channels in order, or "
-            "duplicate tiles (paper §3.5).")
+    """Every NoC in the topology must be independently deadlock-free."""
+    for noc in sorted({t.noc for t in topo.tiles}):
+        rep = analyze(topo, noc=noc)
+        if not rep.ok:
+            raise RuntimeError(
+                f"topology {topo.name!r} can deadlock on noc {noc!r}:\n"
+                f"{rep.summary()}\n"
+                "Re-place tiles so chains acquire channels in order, or "
+                "duplicate tiles (paper §3.5).")

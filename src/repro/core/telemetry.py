@@ -50,12 +50,30 @@ def append(log: RingLog, rows: jnp.ndarray, mask: jnp.ndarray) -> RingLog:
 
 def read_entry(log: RingLog, idx) -> Tuple[RingLog, jnp.ndarray, jnp.ndarray]:
     """Serve one readback request.  Returns (log', entry, accepted).
-    Requests beyond the request buffer are dropped (accepted=False)."""
+
+    An accepted request occupies one request-buffer slot until the service
+    completes (:func:`drain`); requests arriving with the buffer full are
+    dropped (accepted=False) and the client re-requests — paper §4.6."""
     n = log.entries.shape[0]
     accepted = log.req_fill < REQ_BUF
+    log = dataclasses.replace(
+        log, req_fill=log.req_fill + accepted.astype(jnp.int32))
     entry = log.entries[idx % n]
-    # requests drain immediately after service in this model
     return log, entry, accepted
+
+
+def drain(log: RingLog, served=None) -> RingLog:
+    """Service completion: `served` outstanding requests (default: all)
+    leave the request buffer, freeing slots for new readbacks."""
+    served = log.req_fill if served is None else served
+    return dataclasses.replace(
+        log, req_fill=jnp.maximum(log.req_fill - served, 0))
+
+
+def entry_at(log: RingLog, age) -> jnp.ndarray:
+    """The entry written `age` appends ago (0 = newest)."""
+    cap = log.entries.shape[0]
+    return log.entries[(log.wr - 1 - age) % cap]
 
 
 def timestamp(step_counter) -> jnp.ndarray:

@@ -23,9 +23,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.noc import Coord, chain_channels, mesh_coords
 
 # route-match spaces a tile can use to pick the next hop (paper §4.2: CAMs
-# keyed on header fields, runtime-rewritable)
+# keyed on header fields, runtime-rewritable).  "tile" addresses a
+# management-NoC endpoint by its target index (paper §3.6).
 MATCH_SPACES = ("ethertype", "ip_proto", "udp_port", "tcp_port", "flow_hash",
-                "rr", "const", "vip")
+                "rr", "const", "vip", "tile")
 
 
 @dataclasses.dataclass
@@ -73,17 +74,26 @@ class TopologyConfig:
         self.chains.append(list(names))
 
     def insert_on_path(self, name: str, kind: str, x: int, y: int,
-                       src: str, dst: str, noc: str = "data") -> TileDecl:
+                       src: str, dst: str, noc: str = "data",
+                       match: Optional[str] = None,
+                       key: Optional[int] = None) -> TileDecl:
         """Insert a tile between `src` and `dst` purely as a config edit
         (the paper's Table-1 flexibility story): every route on `src` that
         pointed at `dst` is re-aimed at the new tile, the new tile gets a
         const route on to `dst`, and declared chains passing src->dst are
         re-threaded through the new tile so the deadlock analysis stays
-        honest.  Neither endpoint's tile function is touched."""
+        honest.  Neither endpoint's tile function is touched.
+
+        Pass `match`/`key` to rewrite the re-aimed routes' match condition
+        — an encapsulation tile classifies on the *outer* header (e.g.
+        ip_proto=4 for IP-in-IP), not on the key the original route used."""
         t = self.add_tile(name, kind, x, y, noc)
         for r in self.tile(src).routes:
             if r.next_tile == dst:
                 r.next_tile = name
+                if match is not None:
+                    assert match in MATCH_SPACES, match
+                    r.match, r.key = match, key
         t.routes.append(RouteEntry("const", None, dst))
         for c in self.chains:
             for i in range(len(c) - 1):
@@ -129,11 +139,24 @@ class TopologyConfig:
             for n in c:
                 if n not in names:
                     errors.append(f"chain {c} references unknown tile {n!r}")
+        noc_of = {t.name: t.noc for t in self.tiles}
         for t in self.tiles:
             for r in t.routes:
                 if r.next_tile not in names:
                     errors.append(f"route on {t.name!r} -> unknown tile "
                                   f"{r.next_tile!r}")
+                elif noc_of[r.next_tile] != t.noc:
+                    # paper §3.6: management traffic runs on its own NoC so
+                    # it never enters a dataplane chain's dependency graph
+                    errors.append(
+                        f"route on {t.name!r} (noc {t.noc!r}) crosses into "
+                        f"noc {noc_of[r.next_tile]!r} tile "
+                        f"{r.next_tile!r}: control and data traffic must "
+                        f"not share chains")
+        for c in self.chains:
+            nocs = sorted({noc_of[n] for n in c if n in noc_of})
+            if len(nocs) > 1:
+                errors.append(f"chain {c} mixes nocs {nocs}")
         return errors
 
     # ---- generation ("top-level wiring") ------------------------------------

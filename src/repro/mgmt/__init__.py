@@ -1,0 +1,7 @@
+"""In-band management plane (paper §3.6, §4.5, §4.6).
+
+`repro.mgmt.plane` binds a management UDP port into any topology and
+registers the `mgmt` tile that decodes/applies control commands inside the
+compiled pipeline; `repro.mgmt.console` is the host-side operator client.
+"""
+from repro.mgmt.plane import DEFAULT_MGMT_PORT, bind_mgmt  # noqa: F401

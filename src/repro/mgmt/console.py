@@ -1,0 +1,167 @@
+"""Operator console: the host-side management client (paper §4.6's
+"unmodified Linux client" for the control plane).
+
+Crafts management command frames (standard Ethernet/IPv4/UDP + RPC with
+``MSG_CTRL`` bodies), feeds them through a management-bound stack, and
+parses the ack / readback frames that come back down the TX chain.  All
+host-side work is numpy/struct — the console talks to the stack the same
+way a remote operator box would talk to the accelerator.
+"""
+from __future__ import annotations
+
+import struct
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import control
+from repro.net import frames as F
+from repro.net import rpc
+
+ETH_HLEN, IP_HLEN, UDP_HLEN = 14, 20, 8
+
+
+def command_frame(src_ip: int, dst_ip: int, src_port: int, mgmt_port: int,
+                  op: int, target: int = 0, a: int = 0, b: int = 0,
+                  c: int = 0, req_id: int = 0) -> bytes:
+    """One wire-format management command frame."""
+    body = struct.pack("!5I", op & 0xFFFFFFFF, target & 0xFFFFFFFF,
+                       a & 0xFFFFFFFF, b & 0xFFFFFFFF, c & 0xFFFFFFFF)
+    return F.udp_rpc_frame(src_ip, dst_ip, src_port, mgmt_port,
+                           rpc.np_frame(rpc.MSG_CTRL, req_id, body))
+
+
+def parse_response(frame: bytes) -> Dict:
+    """Parse one management reply frame into {op, version, status, row,
+    req_id}.  `row` is the LOG_READ counter payload [step, packets_in,
+    drops, noc_latency, tile_index].  Replies may be Ethernet- or
+    IP-level (the TCP stack's TX boundary emits IP frames): an IP-level
+    frame starts with an IPv4 version nibble AND its total-length field
+    covers the whole frame (an Ethernet frame carries 14 extra bytes, so
+    a MAC happening to start with 0x4_ cannot satisfy both)."""
+    is_ip = (frame[0] >> 4 == 4
+             and struct.unpack_from("!H", frame, 2)[0] == len(frame))
+    l2 = 0 if is_ip else ETH_HLEN
+    rpc_off = l2 + IP_HLEN + UDP_HLEN
+    req_id = struct.unpack_from("!I", frame, rpc_off + 3)[0]
+    w = struct.unpack_from(f"!{control.RESP_WORDS}I", frame,
+                           rpc_off + rpc.HLEN)
+    return {"op": w[0], "version": w[1], "status": w[2],
+            "row": {"step": w[3], "packets_in": w[4], "drops": w[5],
+                    "noc_latency": w[6], "tile_index": w[7]},
+            "req_id": req_id}
+
+
+class MgmtConsole:
+    """Drives one management-bound stack (`UdpStack` / `TcpStack` with
+    ``mgmt_port=...``).  Name→id resolution comes from the compiled
+    pipeline's metadata, so the console never hardcodes the topology."""
+
+    def __init__(self, stack, client_ip: Optional[int] = None,
+                 client_port: int = 5999):
+        if getattr(stack, "mgmt_port", None) is None:
+            raise ValueError("stack has no management port binding "
+                             "(construct it with mgmt_port=...)")
+        self.stack = stack
+        self.port = stack.mgmt_port
+        self.client_ip = client_ip if client_ip is not None \
+            else F.ip("10.0.9.9")
+        self.client_port = client_port
+        self._req_id = 0
+        pipe = getattr(stack, "pipeline", None) or stack.rx_pipe
+        meta = pipe.pipe_meta
+        self.node_ids = {n: i for i, n in enumerate(meta["order"])}
+        self.group_ids = {g: i for i, g in enumerate(meta["groups"])}
+        self.table_ids = {t: i for i, t in enumerate(meta["tables"])}
+
+    # ---- transport -------------------------------------------------------
+    def roundtrip(self, state, cmds: Sequence[Tuple[int, int, int, int, int]]
+                  ) -> Tuple[Dict, List[Dict]]:
+        """Send one batch of (op, target, a, b, c) commands; returns
+        (state', responses) in command order."""
+        frames = []
+        ids = []
+        for (op, target, a, b, c) in cmds:
+            self._req_id += 1
+            ids.append(self._req_id)
+            frames.append(command_frame(
+                self.client_ip, self.stack.local_ip, self.client_port,
+                self.port, op, target, a, b, c, req_id=self._req_id))
+        payload, length = F.to_batch(frames, 256)
+        payload, length = jnp.asarray(payload), jnp.asarray(length)
+        if hasattr(self.stack, "rx_tx"):                       # UDP stack
+            state, q, ql, alive, info = self.stack.rx_tx(
+                state, payload, length)
+            mask = np.asarray(alive & info["mgmt"])
+        else:                                                  # TCP stack
+            state, _resps, q, ql, mask = self.stack.rx_mgmt(
+                state, payload, length)
+            mask = np.asarray(mask)
+        q, ql = np.asarray(q), np.asarray(ql)
+        out = []
+        for i in range(len(frames)):
+            if not mask[i]:
+                out.append({"op": 0, "version": 0, "status": 0,
+                            "row": {}, "req_id": ids[i], "lost": True})
+                continue
+            out.append(parse_response(bytes(q[i, :ql[i]].tobytes())))
+        return state, out
+
+    # ---- write operations ------------------------------------------------
+    def set_nat(self, state, slot: int, virtual_ip: int, physical_ip: int):
+        """Rewrite one NAT mapping; the next batch translates with it."""
+        state, (r,) = self.roundtrip(state, [
+            (control.OP_NAT_SET, 0, slot, virtual_ip, physical_ip)])
+        return state, r
+
+    def set_route(self, state, table: str, slot: int, key: int,
+                  next_node: str):
+        """Rewrite one CAM slot (e.g. bind a new UDP port to an app)."""
+        state, (r,) = self.roundtrip(state, [
+            (control.OP_ROUTE_SET, self.table_ids[table], slot, key,
+             self.node_ids[next_node])])
+        return state, r
+
+    def drain_replica(self, state, group: str, replica: int):
+        """Mark one app replica down: dispatch stops selecting it."""
+        state, (r,) = self.roundtrip(state, [
+            (control.OP_HEALTH_SET, self.group_ids[group], replica, 0, 0)])
+        return state, r
+
+    def restore_replica(self, state, group: str, replica: int):
+        state, (r,) = self.roundtrip(state, [
+            (control.OP_HEALTH_SET, self.group_ids[group], replica, 1, 0)])
+        return state, r
+
+    # ---- readback --------------------------------------------------------
+    def read_counters(self, state, tile: str, age: int = 0):
+        """One tile's telemetry counter row, `age` batches back."""
+        state, (r,) = self.roundtrip(state, [
+            (control.OP_LOG_READ, 0, self.node_ids[tile], age, 0)])
+        return state, r
+
+    def version(self, state) -> Tuple[Dict, int]:
+        state, (r,) = self.roundtrip(state, [(control.OP_VERSION, 0, 0, 0, 0)])
+        return state, r["version"]
+
+    def wait_converged(self, state, target_version: int,
+                       max_polls: int = 8) -> Tuple[Dict, bool]:
+        """Poll the version counter until the stack reports convergence."""
+        for _ in range(max_polls):
+            state, v = self.version(state)
+            if v >= target_version:
+                return state, True
+        return state, False
+
+
+def dump_counters(stack, state, age: int = 0) -> Tuple[Dict, Dict[str, Dict]]:
+    """Read every tile's counter row over the management port.  Each tile's
+    log has its own request buffer, so one batch of LOG_READs (one per
+    tile) never overflows REQ_BUF."""
+    con = MgmtConsole(stack)
+    tiles = list(con.node_ids)
+    state, resps = con.roundtrip(state, [
+        (control.OP_LOG_READ, 0, con.node_ids[t], age, 0) for t in tiles])
+    return state, {t: r["row"] for t, r in zip(tiles, resps)
+                   if r["status"] == 1}

@@ -1,0 +1,276 @@
+"""Management-plane subsystem: the in-band control path (paper §3.6, §4.5,
+§4.6).
+
+Control packets are ordinary UDP frames carrying ``MSG_CTRL`` RPC bodies on
+a bound management port.  They traverse the *compiled* dataplane pipeline
+like any other packet (eth_rx -> ip_rx -> udp_rx -> mgmt -> udp_tx -> ...),
+so diagnostics and control are reachable from an unmodified client on the
+network — the paper's in-band readback story.  Structurally, the controller
+and its per-tile endpoints are declared on a dedicated ``noc="ctrl"``
+topology with its own deadlock analysis: control distribution can never
+join (or deadlock against) a dataplane chain, and `TopologyConfig.validate`
+rejects any route that crosses between the NoCs.
+
+The `mgmt` tile registered here:
+
+  * decodes `(op, target, a, b, c)` commands (`control.decode_command`),
+  * applies writes (NAT_SET / ROUTE_SET / HEALTH_SET) **live**: the new
+    tables are staged in the carrier and committed by the executor after
+    the batch, so the next batch runs with the new configuration — no
+    recompile (versioned for convergence polling),
+  * serves LOG_READ requests from any tile's telemetry RingLog, with the
+    REQ_BUF drop-and-re-request semantics of §4.6,
+  * emits a fixed-size response body for every management-port packet, so
+    acks and readback rows flow back as standard TX frames.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import control, routing, telemetry
+from repro.core.compiler import register_tile
+from repro.core.routing import RouteTable
+from repro.core.topology import TopologyConfig
+from repro.net import bytesops as B
+from repro.net import ipv4, rpc
+
+DEFAULT_MGMT_PORT = 9909
+
+
+# ---------------------------------------------------------------------------
+# topology binding (the config edit that turns a stack operable)
+
+
+def bind_mgmt(topo: TopologyConfig, port: int = DEFAULT_MGMT_PORT,
+              targets: Optional[List[str]] = None) -> Dict:
+    """Bind a management port into `topo` — pure configuration edits.
+
+    Dataplane side: a `mgmt` tile is parked behind the UDP parser with a
+    ``udp_port == port`` route and replies through `udp_tx` (both are added
+    if the stack has none, e.g. a TCP stack: management stays UDP, §4.6).
+    Control side: a controller tile plus one `‹tile›.m` endpoint per managed
+    tile are declared on ``noc="ctrl"`` with their own chains, so the
+    control-distribution paths get an independent deadlock analysis."""
+    base_x = topo.dim_x
+    topo.dim_x += 2
+
+    if not topo.has_tile("udp_rx"):
+        topo.add_tile("udp_rx", "udp_rx", base_x, 0)
+        topo.add_route("ip_rx", "ip_proto", ipv4.PROTO_UDP, "udp_rx")
+    if not topo.has_tile("udp_tx"):
+        topo.add_tile("udp_tx", "udp_tx", base_x, 1)
+        topo.add_route("udp_tx", "const", None, "ip_tx")
+
+    topo.add_tile("mgmt", "mgmt", base_x + 1, 0)
+    topo.add_route("udp_rx", "udp_port", port, "mgmt")
+    topo.add_route("mgmt", "const", None, "udp_tx")
+    topo.add_chain("eth_rx", "ip_rx", "udp_rx", "mgmt", "udp_tx",
+                   "ip_tx", "eth_tx")
+    # every dataplane tile gets a management endpoint; the mgmt tile's own
+    # ctrl-NoC interface is `ctrl_in` (same coordinate), not an endpoint
+    if targets is None:
+        targets = [t.name for t in topo.tiles_on("data")
+                   if t.name != "mgmt"]
+
+    # ---- ctrl NoC: controller + per-tile management endpoints ------------
+    ctrl = next((t.name for t in topo.tiles_on("ctrl")
+                 if t.kind == "controller"), None)
+    if ctrl is None:
+        ctrl = "ctrl"
+        topo.add_tile("ctrl", "controller", base_x + 1, 1, noc="ctrl")
+    topo.add_tile("ctrl_in", "ctrl_in", base_x + 1, 0, noc="ctrl")
+    topo.add_route("ctrl_in", "const", None, ctrl)
+    topo.add_chain("ctrl_in", ctrl)
+    for k, tname in enumerate(targets):
+        td = topo.tile(tname)
+        ep = f"{tname}.m"
+        topo.add_tile(ep, "mgmt_ep", td.x, td.y, noc="ctrl")
+        topo.add_route(ctrl, "tile", k, ep)       # config write delivery
+        topo.add_chain(ctrl, ep)
+        # the readback *response* path (endpoint -> controller) is a
+        # message chain, not a forwarding route: it must be modeled in the
+        # deadlock analysis, but routes stay a tree so the ctrl pipeline
+        # compiles as a DAG
+        topo.add_chain(ep, ctrl)
+    return {"port": port, "mgmt": "mgmt", "ctrl_in": "ctrl_in",
+            "controller": ctrl, "targets": list(targets)}
+
+
+# ---------------------------------------------------------------------------
+# ctrl-NoC structural tiles (distribution endpoints; no packet processing)
+
+
+@register_tile("ctrl_in")
+def ctrl_in_tile(state, carrier, pred, ctx):
+    """Injection point where the dataplane mgmt tile hands decoded commands
+    onto the management NoC."""
+    return state, carrier, None
+
+
+@register_tile("mgmt_ep")
+def mgmt_ep_tile(state, carrier, pred, ctx):
+    """Per-tile management endpoint: receives table writes, sources log
+    readbacks (structural — the executor applies writes centrally)."""
+    return state, carrier, None
+
+
+# ---------------------------------------------------------------------------
+# the management tile (compiled into the dataplane pipeline)
+
+
+def _mgmt_init(ctx):
+    return {"mgmt": {"ctrl": control.make_controller()}}
+
+
+@register_tile("mgmt", init=_mgmt_init)
+def mgmt_tile(state, carrier, pred, ctx):
+    """Decode + apply + respond, vectorized over the batch.
+
+    Commands are processed in batch order under one `lax.scan` (the version
+    counter is strictly ordered, like the paper's serialized management
+    NoC).  Table writes are *staged* into ``carrier["mgmt_staged"]`` and
+    committed by the executor after the batch — the ack a client receives
+    is the promise that the *next* batch sees the new tables."""
+    pm = ctx.pipe
+    meta = carrier["meta"]
+    body, blen = carrier["body"], carrier["blen"]
+    nb = body.shape[0]
+
+    valid = (pred & (meta["msg_type"] == rpc.MSG_CTRL)
+             & (blen >= control.CMD_BYTES))
+    words = jnp.stack([B.be32(body, 4 * i)
+                       for i in range(control.CMD_WORDS)], axis=1)  # (B, 5)
+
+    # ---- gather the managed tables -----------------------------------
+    has_nat = "nat" in state
+    nat_virt = state["nat"]["virt"] if has_nat else jnp.zeros((1,), jnp.uint32)
+    nat_phys = state["nat"]["phys"] if has_nat else jnp.zeros((1,), jnp.uint32)
+
+    groups = [g for g in pm["groups"] if g in state.get("dispatch", {})]
+    healthy0 = tuple(state["dispatch"][g].healthy for g in groups)
+
+    rts = state.get("routes") or {}
+    tnames = [t for t in pm["tables"] if t in rts]
+    n_tables = len(tnames)
+    slots = routing.TABLE_SLOTS
+    tkeys0 = (jnp.stack([rts[t].keys for t in tnames]) if n_tables
+              else jnp.zeros((1, slots), jnp.int32))
+    tvals0 = (jnp.stack([rts[t].values for t in tnames]) if n_tables
+              else jnp.zeros((1, slots), jnp.int32))
+
+    telem = state.get("telemetry")
+    lnames = [n for n in pm["order"]
+              if telem is not None and n in telem["logs"]]
+    n_logs = len(lnames)
+    ents = (jnp.stack([telem["logs"][n].entries for n in lnames]) if n_logs
+            else jnp.zeros((1, 1, telemetry.LOG_WIDTH), jnp.int32))
+    wrs = (jnp.stack([telem["logs"][n].wr for n in lnames]) if n_logs
+           else jnp.zeros((1,), jnp.int32))
+
+    ctrlst = state["mgmt"]["ctrl"]
+    carry0 = {
+        "version": ctrlst.version, "last_op": ctrlst.last_op,
+        "acks": ctrlst.acks,
+        "nat_virt": nat_virt, "nat_phys": nat_phys,
+        "healthy": healthy0,
+        "tkeys": tkeys0, "tvals": tvals0,
+        # outstanding readbacks were serviced between batches (drain)
+        "fills": jnp.zeros((max(n_logs, 1),), jnp.int32),
+    }
+
+    def step(c, xs):
+        w, v = xs
+        cmd = control.decode_command(w)
+        op, target = cmd["op"], cmd["target"]
+        a, b, cc = cmd["a"], cmd["b"], cmd["c"]
+
+        # NAT_SET — rewrite one virtual->physical mapping
+        is_nat = v & (op == control.OP_NAT_SET) & has_nat
+        s_nat = jnp.clip(a, 0, c["nat_virt"].shape[0] - 1)
+        nat_ok = is_nat & (a >= 0) & (a < c["nat_virt"].shape[0])
+        nv = c["nat_virt"].at[s_nat].set(b.astype(jnp.uint32))
+        np_ = c["nat_phys"].at[s_nat].set(cc.astype(jnp.uint32))
+        nat_virt = jnp.where(nat_ok, nv, c["nat_virt"])
+        nat_phys = jnp.where(nat_ok, np_, c["nat_phys"])
+
+        # HEALTH_SET — drain/restore one replica of one dispatch group
+        hs, health_ok = [], jnp.zeros((), bool)
+        for gi, h in enumerate(c["healthy"]):
+            apply_h = (v & (op == control.OP_HEALTH_SET) & (target == gi)
+                       & (a >= 0) & (a < h.shape[0]))
+            idx = jnp.clip(a, 0, h.shape[0] - 1)
+            hs.append(jnp.where(apply_h, h.at[idx].set(b != 0), h))
+            health_ok = health_ok | apply_h
+        healthy = tuple(hs)
+
+        # ROUTE_SET — rewrite one CAM slot of one routing table
+        is_route = v & (op == control.OP_ROUTE_SET) & (n_tables > 0)
+        route_ok = (is_route & (target >= 0) & (target < n_tables)
+                    & (a >= 0) & (a < slots))
+        ti = jnp.clip(target, 0, max(n_tables - 1, 0))
+        si = jnp.clip(a, 0, slots - 1)
+        tk = c["tkeys"].at[ti, si].set(b.astype(jnp.int32))
+        tv = c["tvals"].at[ti, si].set(cc.astype(jnp.int32))
+        tkeys = jnp.where(route_ok, tk, c["tkeys"])
+        tvals = jnp.where(route_ok, tv, c["tvals"])
+
+        # LOG_READ — serve a counter row, REQ_BUF backpressure
+        want = v & (op == control.OP_LOG_READ) & (n_logs > 0)
+        fills, row, accepted = control.serve_log_read(
+            ents, wrs, c["fills"], a, b.astype(jnp.int32), want)
+
+        is_ver = v & (op == control.OP_VERSION)
+        applied = nat_ok | health_ok | route_ok
+        version = c["version"] + applied.astype(jnp.int32)
+        status = (applied | accepted | is_ver).astype(jnp.uint32)
+        resp = control.encode_response(w[0], version, status, row)
+
+        nc = {"version": version,
+              "last_op": jnp.where(applied, op, c["last_op"]),
+              "acks": c["acks"] + v.astype(jnp.int32),
+              "nat_virt": nat_virt, "nat_phys": nat_phys,
+              "healthy": healthy, "tkeys": tkeys, "tvals": tvals,
+              "fills": fills}
+        return nc, resp
+
+    carry, resps = jax.lax.scan(step, carry0, (words, valid))
+
+    # ---- responses: fixed 8-word ack / readback bodies ----------------
+    rb = carrier["out_body"]
+    for i in range(control.RESP_WORDS):
+        rb = B.set_be32(rb, 4 * i, resps[:, i])
+    carrier["out_body"] = jnp.where(pred[:, None], rb, carrier["out_body"])
+    carrier["out_blen"] = jnp.where(
+        pred, jnp.full_like(carrier["out_blen"], control.RESP_BYTES),
+        carrier["out_blen"])
+    info = dict(carrier["info"])
+    info["mgmt"] = pred
+    carrier["info"] = info
+
+    # ---- persist controller state + request-buffer fills --------------
+    state = dict(state)
+    state["mgmt"] = {"ctrl": control.ControllerState(
+        version=carry["version"], last_op=carry["last_op"],
+        acks=carry["acks"])}
+    if telem is not None:
+        for i, nme in enumerate(lnames):
+            telem["logs"][nme] = dataclasses.replace(
+                telem["logs"][nme], req_fill=carry["fills"][i])
+
+    # ---- stage table writes for the executor's post-batch commit ------
+    staged = {"healthy": {g: h for g, h in zip(groups, carry["healthy"])}}
+    if has_nat:
+        staged["nat"] = {"virt": carry["nat_virt"],
+                         "phys": carry["nat_phys"]}
+    if n_tables:
+        staged["routes"] = dict(rts)
+        for i, t in enumerate(tnames):
+            staged["routes"][t] = RouteTable(
+                keys=carry["tkeys"][i], values=carry["tvals"][i],
+                default=rts[t].default)
+    carrier["mgmt_staged"] = staged
+    return state, carrier, None

@@ -21,8 +21,25 @@ import jax.numpy as jnp
 
 from repro.core.compiler import StackCompiler, deep_merge
 from repro.core.topology import TopologyConfig
-from repro.net import ipv4
+from repro.mgmt import plane as _mgmt_plane    # registers the mgmt tiles
+from repro.net import ipinip, ipv4
 from repro.net import tiles as _tiles          # noqa: F401  (registers kinds)
+
+
+def _bind_or_check_mgmt(topo: TopologyConfig, mgmt_port: int):
+    """Bind the management plane, or — when the topology was pre-bound —
+    verify the requested port matches the existing binding instead of
+    silently black-holing every command sent to the wrong port."""
+    if not topo.has_tile("mgmt"):
+        return _mgmt_plane.bind_mgmt(topo, mgmt_port)
+    bound = [r.key for r in topo.tile("udp_rx").routes
+             if r.next_tile == "mgmt" and r.match == "udp_port"]
+    if mgmt_port not in bound:
+        raise ValueError(
+            f"topology already binds the management port on "
+            f"{bound or 'an unknown route'}, but mgmt_port={mgmt_port} "
+            f"was requested")
+    return None
 
 
 @dataclasses.dataclass
@@ -47,6 +64,53 @@ def _place_apps(topo: TopologyConfig, apps: List[AppDecl], row: int):
             # reply path: app -> udp_tx -> ip_tx -> eth_tx
             topo.add_route(nm, "const", None, "udp_tx")
             x += 1
+
+
+def udp_topology_with_nat(apps: List[AppDecl],
+                          name="udp-nat-stack") -> TopologyConfig:
+    """UDP stack with NAT between IP and UDP, built from the plain
+    topology purely via config edits: widen the mesh, shift the downstream
+    tiles one column right (a detour placement would re-acquire a channel
+    and the deadlock analysis rejects it), insert the tile on the path."""
+    topo = udp_topology(apps, name=name)
+    topo.dim_x += 1
+    shifted = ["udp_rx"] + [t.name for t in topo.tiles
+                            if t.kind.startswith("app:")]
+    for nm in shifted:
+        topo.tile(nm).x += 1
+    topo.insert_on_path("nat_rx", "nat_rx", 2, 0, "ip_rx", "udp_rx")
+    return topo
+
+
+def ipinip_udp_topology(apps: List[AppDecl],
+                        name="udp-ipinip-stack") -> TopologyConfig:
+    """UDP stack behind an IP-in-IP tunnel (paper §3.5/§4.5), built from
+    the plain topology purely via `insert_on_path` edits:
+
+      * `ipip_decap` lands between ip_rx and udp_rx, classifying on the
+        *outer* header (ip_proto=4 — the match override),
+      * a *duplicated* IP tile (`ip_rx_inner`) follows it to parse the
+        inner packet — duplication is how the paper breaks the
+        repeated-header resource-ordering problem,
+      * `ipip_encap` lands between ip_tx and eth_tx on a third mesh row,
+        wrapping replies toward the physical host (`outer_src`/`outer_dst`
+        compiler options).
+    """
+    topo = udp_topology(apps, name=name)
+    topo.dim_x += 2
+    topo.dim_y = 3
+    shifted = ["udp_rx"] + [t.name for t in topo.tiles
+                            if t.kind.startswith("app:")]
+    for nm in shifted:
+        topo.tile(nm).x += 2
+    topo.insert_on_path("ipip_decap", "ipinip_decap", 2, 0,
+                        "ip_rx", "udp_rx",
+                        match="ip_proto", key=ipinip.PROTO_IPIP)
+    topo.insert_on_path("ip_rx_inner", "ip_rx", 3, 0,
+                        "ipip_decap", "udp_rx")
+    topo.insert_on_path("ipip_encap", "ipinip_encap", 1, 2,
+                        "ip_tx", "eth_tx")
+    return topo
 
 
 def udp_topology(apps: List[AppDecl], name="udp-stack") -> TopologyConfig:
@@ -77,21 +141,39 @@ def udp_topology(apps: List[AppDecl], name="udp-stack") -> TopologyConfig:
 
 
 class UdpStack:
-    """Figure-4 pipeline, compiled from its topology, jittable end to end."""
+    """Figure-4 pipeline, compiled from its topology, jittable end to end.
+
+    Pass ``mgmt_port=<udp port>`` to bind the in-band management plane
+    (paper §3.6/§4.6): control frames on that port reach the compiled
+    `mgmt` tile, and the controller/endpoint distribution paths are
+    declared on their own ``ctrl`` NoC (compiled as `ctrl_pipe`)."""
 
     def __init__(self, apps: List[AppDecl], local_ip: int,
                  check_deadlock: bool = True,
                  topo: Optional[TopologyConfig] = None,
-                 nat_entries=None, with_telemetry: bool = True):
+                 nat_entries=None, with_telemetry: bool = True,
+                 mgmt_port: Optional[int] = None,
+                 options: Optional[dict] = None):
         self.topo = topo if topo is not None else udp_topology(apps)
         self.apps = apps
         self.local_ip = local_ip
         self.with_telemetry = with_telemetry
+        self.mgmt_port = mgmt_port
+        self.mgmt_meta = None
+        if mgmt_port is not None:
+            self.mgmt_meta = _bind_or_check_mgmt(self.topo, mgmt_port)
+        opts = {"local_ip": local_ip, "nat_entries": nat_entries or []}
+        opts.update(options or {})
         self.compiler = StackCompiler(
             self.topo, bindings={a.name: a for a in apps},
-            options={"local_ip": local_ip, "nat_entries": nat_entries or []},
-            check_deadlock=check_deadlock)
+            options=opts, check_deadlock=check_deadlock)
         self.pipeline = self.compiler.compile("eth_rx")
+        self.ctrl_pipe = None
+        if mgmt_port is not None:
+            self.ctrl_pipe = StackCompiler(
+                self.topo, options=opts, check_deadlock=False,
+                noc="ctrl").compile(
+                    (self.mgmt_meta or {}).get("ctrl_in", "ctrl_in"))
 
     def init_state(self):
         st = self.pipeline.init_state(with_telemetry=self.with_telemetry)
@@ -145,25 +227,51 @@ def tcp_topology(with_nat: bool = False, name="tcp-stack") -> TopologyConfig:
 
 class TcpStack:
     """TCP stack with optional NAT tiles for live migration.  The RX chain
-    and the TX build chain are both compiled from the topology's routes."""
+    and the TX build chain are both compiled from the topology's routes.
+
+    Management stays UDP even on the TCP stack (paper §4.6): with
+    ``mgmt_port=...`` the binding adds the UDP parser/builder tiles and
+    routes control frames to the `mgmt` tile; use :meth:`rx_mgmt` to get
+    the in-band reply frames alongside the TCP engine responses."""
 
     def __init__(self, local_ip: int, with_nat: bool = False,
                  nat_entries=None, max_conns: int = 16,
                  topo: Optional[TopologyConfig] = None,
-                 with_telemetry: bool = True):
+                 with_telemetry: bool = True,
+                 mgmt_port: Optional[int] = None):
         self.topo = topo if topo is not None else tcp_topology(with_nat)
         self.with_nat = with_nat
         self.local_ip = local_ip
         self.max_conns = max_conns
         self.nat_entries = nat_entries or []
         self.with_telemetry = with_telemetry
+        self.mgmt_port = mgmt_port
+        self.mgmt_meta = None
+        if mgmt_port is not None:
+            self.mgmt_meta = _bind_or_check_mgmt(self.topo, mgmt_port)
         self.compiler = StackCompiler(
             self.topo, options={"local_ip": local_ip, "max_conns": max_conns,
                                 "nat_entries": self.nat_entries})
         self.rx_pipe = self.compiler.compile("eth_rx")
         self.tx_pipe = self.compiler.compile("tcp_tx")
+        self.ctrl_pipe = None
+        if mgmt_port is not None:
+            self.ctrl_pipe = StackCompiler(
+                self.topo, options={"local_ip": local_ip},
+                check_deadlock=False, noc="ctrl").compile(
+                    (self.mgmt_meta or {}).get("ctrl_in", "ctrl_in"))
 
     def init_state(self):
+        # route tables live in shared state but hold *per-pipeline* node
+        # indices: a table name appearing in both pipelines would let one
+        # silently clobber the other at deep_merge time — refuse early
+        clash = set(self.rx_pipe.table_entries) & \
+            set(self.tx_pipe.table_entries)
+        if clash:
+            raise ValueError(
+                f"route tables {sorted(clash)} are keyed by both the RX "
+                f"and TX pipelines; re-name or re-place the source tiles "
+                f"so each keyed route belongs to one pipeline")
         st = self.rx_pipe.init_state(with_telemetry=self.with_telemetry)
         # the TX chain gets no RingLogs: tx_frame returns only the built
         # frame (original API), so TX-side log writes could never persist —
@@ -177,6 +285,18 @@ class TcpStack:
         state, carrier = self.rx_pipe.run(
             state, {"payload": payload, "length": length})
         return state, carrier["tcp_resps"]
+
+    def rx_mgmt(self, state, payload, length):
+        """RX with the management branch: returns (state', tcp_resps,
+        mgmt_tx_payload, mgmt_tx_len, mgmt_mask) — rows of the batch that
+        were management commands get in-band reply frames."""
+        state, carrier = self.rx_pipe.run(
+            state, {"payload": payload, "length": length})
+        n = payload.shape[0]
+        mask = carrier["info"].get("mgmt", jnp.zeros((n,), bool))
+        mask = mask & carrier.get("alive", jnp.ones((n,), bool))
+        return (state, carrier["tcp_resps"], carrier.get("tx_payload"),
+                carrier.get("tx_len"), mask)
 
     def tx_frame(self, state, seg_meta, data, dlen):
         """Build one TX frame from an emitted segment (through NAT)."""

@@ -96,10 +96,17 @@ def _tcp_init(ctx):
 def tcp_rx(state, carrier, pred, ctx):
     """Parse segments and drive the connection-table engine.  Processes the
     whole batch in arrival order (the engine's lookup drops non-matching
-    segments itself, like the hardware tile)."""
+    segments itself, like the hardware tile).  Rows that did not arrive
+    here (`pred` false — e.g. UDP management frames sharing the batch) are
+    masked to inert no-flag, no-data segments so the engine never sees
+    another protocol's bytes."""
     data, dlen, m = tcp.parse_segment(carrier["payload"], carrier["length"],
                                       carrier["meta"])
-    conn, resps = tcp.rx_batch(state["conn"], data, dlen, m)
+    meng = dict(m)
+    for k in ("src_ip", "src_port", "dst_port", "tcp_flags"):
+        meng[k] = jnp.where(pred, m[k], jnp.zeros_like(m[k]))
+    conn, resps = tcp.rx_batch(state["conn"], data,
+                               jnp.where(pred, dlen, 0), meng)
     state = dict(state)
     state["conn"] = conn
     carrier.update(meta=m, tcp_resps=resps)

@@ -1,0 +1,349 @@
+"""Management plane: in-band control frames through the compiled pipeline
+(paper §3.6, §4.5, §4.6).
+
+Everything here drives the stack the way a remote operator would: wire-
+format UDP command frames in, parsed ack / readback frames out.  No test
+calls `control.controller_apply` — the compiled `mgmt` tile is the unit
+under test."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import echo
+from repro.core import control, deadlock, telemetry
+from repro.core.compiler import CompileError, StackCompiler
+from repro.mgmt.console import MgmtConsole, command_frame, dump_counters
+from repro.net import frames as F, ipinip, rpc, tcp
+from repro.net.stack import (TcpStack, UdpStack, ipinip_udp_topology,
+                             tcp_topology, udp_topology,
+                             udp_topology_with_nat)
+
+IP_C = F.ip("10.0.0.2")
+IP_S = F.ip("10.0.0.1")
+VIP = F.ip("20.0.0.9")
+VIP2 = F.ip("20.0.0.7")
+TUN_C, TUN_S = F.ip("1.1.1.1"), F.ip("2.2.2.2")
+MP = 9909
+
+
+def batch(frames, max_len=256):
+    p, l = F.to_batch(frames, max_len)
+    return jnp.asarray(p), jnp.asarray(l)
+
+
+def echo_frame(dst_ip, sport, port=7, payload=b"x", req=1):
+    return F.udp_rpc_frame(IP_C, dst_ip, sport, port,
+                           rpc.np_frame(rpc.MSG_ECHO, req, payload))
+
+
+# ---------------------------------------------------------------------------
+# tentpole: NAT_SET over the wire, applied live, versioned ack
+
+
+def test_nat_set_live_via_management_frame():
+    """One compiled pipeline: a NAT_SET UDP command frame is accepted,
+    acked with a version, and the *next* batch translates with the new
+    mapping — no recompile, no direct controller_apply call."""
+    apps = [echo.make(port=7, n_replicas=2)]
+    stack = UdpStack(apps, IP_S, topo=udp_topology_with_nat(apps),
+                     nat_entries=[(VIP, IP_S)], mgmt_port=MP)
+    assert "mgmt" in stack.pipeline.order
+    state = stack.init_state()
+
+    # the old mapping serves, the new VIP does not exist yet
+    state, _, _, alive, info = stack.rx_tx(
+        state, *batch([echo_frame(VIP, 5000)]))
+    assert bool(alive[0]) and bool(info["echo"][0])
+
+    con = MgmtConsole(stack)
+    state, ack = con.set_nat(state, 0, VIP2, IP_S)
+    assert ack["status"] == 1 and ack["version"] == 1
+    assert int(state["mgmt"]["ctrl"].version) == 1
+
+    # next batch: the rewritten slot translates the new virtual IP and the
+    # reply still carries a checksum valid for it (RFC 1624 fixup path)
+    state, q, ql, alive, info = stack.rx_tx(
+        state, *batch([echo_frame(VIP2, 5001)]))
+    assert bool(alive[0]) and bool(info["echo"][0])
+
+    # convergence polling over the same in-band path
+    state, converged = con.wait_converged(state, 1)
+    assert converged
+
+
+def test_ack_rides_the_tx_chain_as_a_real_frame():
+    """The ack is a parseable UDP frame built by the ordinary TX tiles:
+    reply addressing is swapped, the RPC req_id is echoed."""
+    stack = UdpStack([echo.make(port=7)], IP_S, mgmt_port=MP)
+    state = stack.init_state()
+    fr = command_frame(IP_C, IP_S, 5999, MP, control.OP_VERSION, req_id=77)
+    state, q, ql, alive, info = stack.rx_tx(state, *batch([fr]))
+    assert bool(alive[0]) and bool(info["mgmt"][0])
+    from repro.mgmt.console import parse_response
+    r = parse_response(bytes(np.asarray(q)[0, :int(ql[0])].tobytes()))
+    assert r["req_id"] == 77 and r["status"] == 1 and r["version"] == 0
+    # and the frame really is addressed back to the client
+    import struct
+    assert struct.unpack_from("!I", bytes(np.asarray(q)[0].tobytes()),
+                              14 + 16)[0] == IP_C
+
+
+# ---------------------------------------------------------------------------
+# tentpole: LOG_READ telemetry readback + REQ_BUF drop semantics
+
+
+def test_log_read_returns_real_counter_row():
+    stack = UdpStack([echo.make(port=7, n_replicas=2)], IP_S, mgmt_port=MP)
+    state = stack.init_state()
+    state, *_ = stack.rx_tx(state, *batch(
+        [echo_frame(IP_S, 5000 + i, req=i) for i in range(3)]))
+
+    con = MgmtConsole(stack)
+    echo_idx = con.node_ids["echo"]
+    state, r = con.read_counters(state, "echo", age=1)   # age 0 = the
+    assert r["status"] == 1                              # readback batch
+    row = r["row"]
+    assert row["step"] == 1 and row["packets_in"] == 3 and row["drops"] == 0
+    assert row["noc_latency"] > 0 and row["tile_index"] == echo_idx
+    # and the row matches the RingLog the executor keeps
+    want = np.asarray(telemetry.entry_at(
+        state["telemetry"]["logs"]["echo"], 1))
+    assert [row["step"], row["packets_in"], row["drops"],
+            row["noc_latency"], row["tile_index"]] == want[:5].tolist()
+
+
+def test_log_read_beyond_req_buf_is_dropped_then_served_on_retry():
+    stack = UdpStack([echo.make(port=7)], IP_S, mgmt_port=MP)
+    state = stack.init_state()
+    con = MgmtConsole(stack)
+    eth_idx = con.node_ids["eth_rx"]
+    reads = [(control.OP_LOG_READ, 0, eth_idx, 0, 0)] * (telemetry.REQ_BUF + 2)
+    state, resps = con.roundtrip(state, reads)
+    assert [r["status"] for r in resps] == [1] * telemetry.REQ_BUF + [0, 0]
+    # dropped requests left the version untouched and the fill visible
+    assert int(state["telemetry"]["logs"]["eth_rx"].req_fill) == \
+        telemetry.REQ_BUF
+    # clients re-request; the buffer drained between batches
+    state, resps = con.roundtrip(state, reads[:1])
+    assert resps[0]["status"] == 1
+
+
+def test_req_fill_unit_semantics():
+    """Satellite: read_entry now models fill/drain honestly."""
+    log = telemetry.make_log(8)
+    accepted = []
+    for i in range(telemetry.REQ_BUF + 2):
+        log, entry, ok = telemetry.read_entry(log, jnp.int32(i))
+        accepted.append(bool(ok))
+    assert accepted == [True] * telemetry.REQ_BUF + [False, False]
+    assert int(log.req_fill) == telemetry.REQ_BUF
+    log = telemetry.drain(log)
+    assert int(log.req_fill) == 0
+    log, _, ok = telemetry.read_entry(log, jnp.int32(0))
+    assert bool(ok)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: ROUTE_SET — runtime CAM rewrite through the management port
+
+
+def test_route_set_binds_new_port_live():
+    stack = UdpStack([echo.make(port=7)], IP_S, mgmt_port=MP)
+    state = stack.init_state()
+    probe = batch([echo_frame(IP_S, 5000, port=7777)])
+    state, _, _, _, info = stack.rx_tx(state, *probe)
+    assert not bool(info["echo"][0])              # port unknown
+
+    con = MgmtConsole(stack)
+    state, ack = con.set_route(state, "udp_rx:udp_port", 15, 7777, "echo")
+    assert ack["status"] == 1
+    state, _, _, alive, info = stack.rx_tx(state, *probe)
+    assert bool(alive[0]) and bool(info["echo"][0])
+
+
+# ---------------------------------------------------------------------------
+# satellite: HEALTH_SET end-to-end — a drained replica stops being picked
+
+
+def test_health_set_drains_replica_end_to_end():
+    apps = [echo.make(port=7, n_replicas=2)]
+    stack = UdpStack(apps, IP_S, mgmt_port=MP)
+    state = stack.init_state()
+    con = MgmtConsole(stack)
+
+    state, ack = con.drain_replica(state, "echo", 0)
+    assert ack["status"] == 1
+    assert not bool(state["dispatch"]["echo"].healthy[0])
+
+    frames = [echo_frame(IP_S, 6000 + i, req=i) for i in range(4)]
+    state, *_ = stack.rx_tx(state, *batch(frames))
+    served = np.asarray(state["apps"]["echo"]["served"])
+    assert served.tolist() == [0, 4]              # replica 0 never selected
+
+    state, ack = con.restore_replica(state, "echo", 0)
+    assert ack["status"] == 1 and ack["version"] == 2
+    state, *_ = stack.rx_tx(state, *batch(frames))
+    served = np.asarray(state["apps"]["echo"]["served"])
+    assert served[0] > 0                          # back in rotation
+
+
+# ---------------------------------------------------------------------------
+# tentpole: ctrl NoC isolation
+
+
+def test_ctrl_topology_deadlock_analysis_is_independent():
+    """The ctrl NoC passes its own analysis, and a pathological control
+    chain fails the ctrl analysis without touching the data verdict."""
+    topo = udp_topology([echo.make(port=7)])
+    from repro.mgmt.plane import bind_mgmt
+    bind_mgmt(topo, MP)
+    assert deadlock.analyze(topo, noc="data").ok
+    assert deadlock.analyze(topo, noc="ctrl").ok
+
+    # a control chain that re-acquires its channels: ctrl analysis fails,
+    # data analysis is unaffected
+    topo.add_chain("ctrl", "eth_rx.m", "ctrl", "eth_rx.m")
+    rep = deadlock.analyze(topo, noc="ctrl")
+    assert not rep.ok and rep.self_conflicts
+    assert deadlock.analyze(topo, noc="data").ok
+
+
+def test_control_route_joining_dataplane_chain_is_rejected():
+    topo = tcp_topology(with_nat=False)
+    topo.add_route("ctrl", "const", None, "tcp_rx")   # ctrl -> dataplane
+    errs = topo.validate()
+    assert any("crosses" in e for e in errs)
+    with pytest.raises(CompileError):
+        StackCompiler(topo, options={"local_ip": IP_S})
+    # and the reverse direction is equally rejected
+    topo2 = tcp_topology(with_nat=False)
+    topo2.add_route("tcp_rx", "const", None, "ctrl")
+    assert any("crosses" in e for e in topo2.validate())
+
+
+def test_mixed_noc_chain_is_rejected():
+    topo = tcp_topology(with_nat=False)
+    topo.add_chain("ip_rx", "ctrl")
+    assert any("mixes nocs" in e for e in topo.validate())
+
+
+def test_ctrl_pipeline_compiles_from_topology():
+    stack = UdpStack([echo.make(port=7)], IP_S, mgmt_port=MP)
+    order = stack.ctrl_pipe.order
+    assert order[0] == "ctrl_in" and order[1] == "ctrl"
+    assert all(n.endswith(".m") for n in order[2:])
+    # every dataplane tile got a management endpoint (the mgmt tile's own
+    # ctrl-NoC interface is ctrl_in, at its coordinate)
+    data_tiles = {t.name for t in stack.topo.tiles_on("data")}
+    assert {n[:-2] for n in order[2:]} == data_tiles - {"mgmt"}
+
+
+# ---------------------------------------------------------------------------
+# management on the TCP stack (UDP port binding rides alongside TCP)
+
+
+def test_tcp_stack_management_binding_mixed_batch():
+    stack = TcpStack(IP_S, mgmt_port=MP)
+    state = stack.init_state()
+    syn = F.tcp_eth_frame(IP_C, IP_S, 4000, 80, seq=900, ack=0,
+                          flags=tcp.SYN)
+    mf = command_frame(IP_C, IP_S, 5999, MP, control.OP_VERSION, req_id=5)
+    state, resps, q, ql, mask = stack.rx_mgmt(state, *batch([syn, mf]))
+    # the TCP engine still answers the SYN and never sees the UDP frame
+    assert bool(resps["emit"][0])
+    assert int(resps["tcp_flags"][0]) == tcp.SYN | tcp.ACK
+    assert not bool(resps["emit"][1])
+    # the management frame got an in-band reply
+    assert np.asarray(mask).tolist() == [False, True]
+    from repro.mgmt.console import parse_response
+    r = parse_response(bytes(np.asarray(q)[1, :int(ql[1])].tobytes()))
+    assert r["req_id"] == 5 and r["status"] == 1
+
+
+def test_tcp_stack_console_roundtrip():
+    stack = TcpStack(IP_S, mgmt_port=MP)
+    state = stack.init_state()
+    con = MgmtConsole(stack)
+    state, r = con.read_counters(state, "tcp_rx", age=0)
+    assert r["status"] == 1
+    assert r["row"]["tile_index"] == con.node_ids["tcp_rx"]
+
+
+# ---------------------------------------------------------------------------
+# satellite: ipinip-encapsulated UDP topology via insert_on_path only
+
+
+def test_ipinip_udp_topology_golden_roundtrip():
+    """decap -> inner ip -> app -> encap, built purely by config edits; a
+    golden tunneled frame round-trips and the reply is re-encapsulated
+    toward the tunnel peer."""
+    import struct
+    apps = [echo.make(port=7)]
+    topo = ipinip_udp_topology(apps)
+    assert topo.validate() == []
+    stack = UdpStack(apps, IP_S, topo=topo,
+                     options={"outer_src": TUN_S, "outer_dst": TUN_C})
+    order = stack.pipeline.order
+    assert order.index("ipip_decap") < order.index("ip_rx_inner") < \
+        order.index("udp_rx")
+    assert order.index("ip_tx") < order.index("ipip_encap") < \
+        order.index("eth_tx")
+    state = stack.init_state()
+
+    inner_udp = F.udp_datagram(IP_C, IP_S, 5000, 7,
+                               rpc.np_frame(rpc.MSG_ECHO, 9, b"tunneled"))
+    inner_ip = F.ipv4_packet(IP_C, IP_S, 17, inner_udp)
+    outer_ip = F.ipv4_packet(TUN_C, TUN_S, ipinip.PROTO_IPIP, inner_ip)
+    frame = F.eth_frame(b"\x02\x00\x00\x00\x00\x01",
+                        b"\x02\x00\x00\x00\x00\x02", 0x0800, outer_ip)
+    state, q, ql, alive, info = stack.rx_tx(state, *batch([frame], 512))
+    assert bool(alive[0]) and bool(info["echo"][0])
+
+    reply = bytes(np.asarray(q)[0, :int(ql[0])].tobytes())
+    # outer header: IPIP toward the tunnel peer
+    assert reply[14 + 9] == ipinip.PROTO_IPIP
+    assert struct.unpack_from("!II", reply, 14 + 12) == (TUN_S, TUN_C)
+    # inner packet: the echo reply with swapped addressing
+    i = 14 + 20
+    assert reply[i + 9] == 17
+    assert struct.unpack_from("!II", reply, i + 12) == (IP_S, IP_C)
+    sport, dport = struct.unpack_from("!HH", reply, i + 20)
+    assert (sport, dport) == (7, 5000)
+    assert reply[i + 20 + 8 + rpc.HLEN:] == b"tunneled"
+    # an un-tunneled plain frame no longer matches the ingress route
+    state, _, _, _, info = stack.rx_tx(state, *batch(
+        [echo_frame(IP_S, 5001)], 512))
+    assert not bool(info["echo"][0])
+
+
+# ---------------------------------------------------------------------------
+# management traffic coexists with data traffic in one batch
+
+
+def test_mixed_data_and_mgmt_batch_one_pipeline_run():
+    stack = UdpStack([echo.make(port=7)], IP_S, mgmt_port=MP)
+    state = stack.init_state()
+    frames = [echo_frame(IP_S, 5000, payload=b"data"),
+              command_frame(IP_C, IP_S, 5999, MP, control.OP_VERSION,
+                            req_id=3),
+              echo_frame(IP_S, 5001, payload=b"more")]
+    state, q, ql, alive, info = jax.jit(stack.rx_tx)(state, *batch(frames))
+    assert np.asarray(alive).tolist() == [True, True, True]
+    assert np.asarray(info["echo"]).tolist() == [True, False, True]
+    assert np.asarray(info["mgmt"]).tolist() == [False, True, False]
+    # data rows echo their body; the mgmt row carries the response words
+    from repro.mgmt.console import parse_response
+    r = parse_response(bytes(np.asarray(q)[1, :int(ql[1])].tobytes()))
+    assert r["req_id"] == 3 and r["status"] == 1
+
+
+def test_dump_counters_covers_every_tile():
+    stack = UdpStack([echo.make(port=7)], IP_S, mgmt_port=MP)
+    state = stack.init_state()
+    state, *_ = stack.rx_tx(state, *batch([echo_frame(IP_S, 5000)]))
+    state, counters = dump_counters(stack, state)
+    assert set(counters) == set(stack.pipeline.order)
+    # the dump batch itself is what age-0 rows describe: every ingress
+    # tile saw exactly the LOG_READ frames
+    assert counters["eth_rx"]["packets_in"] == len(stack.pipeline.order)
