@@ -11,7 +11,7 @@ PY ?= python
 PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test-fast test bench bench-mgmt
+.PHONY: test-fast test bench bench-mgmt bench-tcp-loss
 
 test-fast:
 	$(PY) -m pytest -q -m "not slow"
@@ -26,3 +26,8 @@ bench:
 # never contends with the dataplane)
 bench-mgmt:
 	$(PY) benchmarks/bench_mgmt.py
+
+# loss-tolerant transport gate: goodput + p99 recovery latency through
+# the netem link at 0.1% / 1% loss (fails on stall or < 20% goodput)
+bench-tcp-loss:
+	$(PY) benchmarks/bench_tcp_loss.py

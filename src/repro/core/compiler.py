@@ -350,7 +350,8 @@ class CompiledPipeline:
 
     # ---- state -----------------------------------------------------------
     def init_state(self, with_telemetry: bool = True,
-                   log_entries: int = 64) -> Dict[str, Any]:
+                   log_entries: int = telemetry.PIPE_LOG_ENTRIES
+                   ) -> Dict[str, Any]:
         st: Dict[str, Any] = {}
         for node, spec, ctx, *_ in self.stages:
             if spec.init is not None:
@@ -365,6 +366,18 @@ class CompiledPipeline:
                 "logs": {node.name: telemetry.make_log(log_entries)
                          for node, *_ in self.stages},
             }})
+        # logs served together over LOG_READ are stacked: every log must
+        # share one ring depth (tile inits contribute extra logs, e.g.
+        # tcp_cc.*, at telemetry.PIPE_LOG_ENTRIES) — reject a mismatch
+        # here instead of crashing inside the compiled mgmt tile
+        logs = st.get("telemetry", {}).get("logs", {})
+        depths = {lg.entries.shape[0] for lg in logs.values()}
+        if len(depths) > 1:
+            raise ValueError(
+                f"telemetry logs mix ring depths {sorted(depths)}; use "
+                f"log_entries={telemetry.PIPE_LOG_ENTRIES} "
+                f"(telemetry.PIPE_LOG_ENTRIES) when tile-contributed logs "
+                f"are present")
         return st
 
     # ---- execution -------------------------------------------------------
@@ -437,6 +450,13 @@ class CompiledPipeline:
                 state["dispatch"] = disp
             if staged.get("routes") is not None:
                 state["routes"] = staged["routes"]
+            if staged.get("rate") is not None and "rate" in state:
+                state["rate"] = staged["rate"]
+            if staged.get("cc") is not None and "conn" in state \
+                    and "cc" in state["conn"]:
+                conn = dict(state["conn"])
+                conn["cc"] = staged["cc"]
+                state["conn"] = conn
         return state, carrier
 
 

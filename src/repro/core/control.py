@@ -13,18 +13,29 @@ Here the control plane is modeled as:
 
 Command encoding (RPC payload, all big-endian u32):
   [op, target_tile_id, a, b, c]
-  op: 1 = NAT_SET    (a=slot, b=virtual_ip, c=physical_ip)
-      2 = ROUTE_SET  (target=table_id, a=slot, b=match_key, c=next_node)
-      3 = HEALTH_SET (target=dispatch_group, a=replica_idx, b=0|1)
-      4 = LOG_READ   (a=log_id, b=entry_age; 0 = newest)
-      5 = VERSION    (read the convergence counter, no mutation)
+  op: 1 = NAT_SET        (a=slot, b=virtual_ip, c=physical_ip)
+      2 = ROUTE_SET      (target=table_id, a=slot, b=match_key, c=next_node)
+      3 = HEALTH_SET     (target=dispatch_group, a=replica_idx, b=0|1)
+      4 = LOG_READ       (a=log_id, b=entry_age; 0 = newest)
+      5 = VERSION        (read the convergence counter, no mutation)
+      6 = LOG_READ_RANGE (a=log_id, b=start_age, c=count <= MAX_RANGE):
+                         bulk counter streaming — one request buffer slot,
+                         up to MAX_RANGE rows in one response frame
+      7 = RATE_SET       (a=bucket slot, b=udp port or -1 to clear,
+                         c=rate | burst<<16 in packets/batch): per-port
+                         token bucket applied at the dispatch tile
+      8 = CC_SET         (a=knob: 0=policy engine-wide (b=0 newreno /
+                         1 dctcp), 1=cwnd, 2=ssthresh; target=conn index,
+                         b=value): live congestion-control knobs
 
-Response encoding (RPC payload, all big-endian u32, fixed 8 words):
+Response encoding (RPC payload, all big-endian u32, 8 words fixed):
   [op, version, status, w0, w1, w2, w3, w4]
   status: writes -> 1 applied / 0 rejected; LOG_READ -> 1 served /
   0 dropped (request buffer full — re-request); VERSION -> 1.
   For LOG_READ, w0..w4 carry the telemetry counter row
   [step, packets_in, drops, noc_latency_cycles, tile_index].
+  LOG_READ_RANGE responses are longer: [op, version, served_count,
+  served_count * 5 row words] (served_count = 0 means dropped).
 """
 from __future__ import annotations
 
@@ -41,11 +52,18 @@ OP_ROUTE_SET = 2
 OP_HEALTH_SET = 3
 OP_LOG_READ = 4
 OP_VERSION = 5
+OP_LOG_READ_RANGE = 6
+OP_RATE_SET = 7
+OP_CC_SET = 8
 
 CMD_WORDS = 5
 CMD_BYTES = 4 * CMD_WORDS
 RESP_WORDS = 8
 RESP_BYTES = 4 * RESP_WORDS
+ROW_WORDS = 5           # counter-row words served per log entry
+MAX_RANGE = 8           # entries per LOG_READ_RANGE response frame
+RANGE_RESP_WORDS = 3 + ROW_WORDS * MAX_RANGE
+RANGE_RESP_BYTES = 4 * RANGE_RESP_WORDS
 
 
 @jax.tree_util.register_dataclass
@@ -140,6 +158,39 @@ def encode_response(op, version, status,
                       jnp.asarray(version).astype(jnp.uint32),
                       jnp.asarray(status).astype(jnp.uint32)])
     return jnp.concatenate([head, entry_words.astype(jnp.uint32)])
+
+
+def encode_range_response(op, version, served, rows) -> jnp.ndarray:
+    """One (RANGE_RESP_WORDS,) uint32 bulk-readback payload:
+    [op, version, served_count, served*ROW_WORDS row words, zero pad]."""
+    head = jnp.stack([jnp.asarray(op).astype(jnp.uint32),
+                      jnp.asarray(version).astype(jnp.uint32),
+                      jnp.asarray(served).astype(jnp.uint32)])
+    return jnp.concatenate([head, rows.reshape(-1).astype(jnp.uint32)])
+
+
+def serve_log_read_range(entries, wrs, fills, log_id, start, count, want):
+    """Serve one LOG_READ_RANGE: up to MAX_RANGE consecutive entries of
+    one log, newest-first from age ``start``, in a single response frame.
+
+    Returns (fills', rows (MAX_RANGE, ROW_WORDS) uint32, served) where
+    ``served`` is the number of valid rows (0 = dropped or empty).  The
+    whole range occupies ONE request-buffer slot — bulk streaming is the
+    point: 1 frame replaces up to MAX_RANGE one-row round trips."""
+    t, n, _ = entries.shape
+    li = jnp.clip(log_id, 0, t - 1)
+    in_range = (log_id >= 0) & (log_id < t)
+    accepted = want & in_range & (fills[li] < telemetry.REQ_BUF)
+    fills = fills.at[li].add(accepted.astype(jnp.int32))
+    written = jnp.minimum(wrs[li], n)
+    avail = jnp.maximum(written - jnp.maximum(start, 0), 0)
+    served = jnp.where(accepted,
+                       jnp.clip(count, 0, jnp.minimum(avail, MAX_RANGE)), 0)
+    ages = jnp.maximum(start, 0) + jnp.arange(MAX_RANGE)
+    eidx = jnp.mod(wrs[li] - 1 - ages, n)
+    rows = entries[li, eidx][:, :ROW_WORDS].astype(jnp.uint32)
+    rows = jnp.where((jnp.arange(MAX_RANGE) < served)[:, None], rows, 0)
+    return fills, rows, served
 
 
 def serve_log_read(entries, wrs, fills, log_id, age, want):

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 
 LOG_WIDTH = 8          # int32 words per entry
 REQ_BUF = 4            # outstanding readback requests
+PIPE_LOG_ENTRIES = 64  # ring depth of every compiled-pipeline log (logs
+                       # served together over LOG_READ must share a depth)
 
 
 @jax.tree_util.register_dataclass
@@ -105,3 +107,13 @@ def latest(log: RingLog, n: int = 1) -> jnp.ndarray:
     cap = log.entries.shape[0]
     idx = (log.wr - jnp.arange(n, 0, -1)) % cap
     return log.entries[idx]
+
+
+def log_order(pipe_order, log_names):
+    """The canonical log-id namespace shared by the management tile and
+    the operator console: pipeline nodes (in execution order) first, then
+    any extra logs (e.g. the per-connection ``tcp_cc.*`` CC logs) sorted
+    by name.  A node's log id therefore equals its node index, keeping
+    LOG_READ ids stable when extra logs appear."""
+    extra = sorted(n for n in log_names if n not in pipe_order)
+    return [n for n in pipe_order if n in log_names] + extra

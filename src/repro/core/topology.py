@@ -44,6 +44,9 @@ class TileDecl:
     y: int
     noc: str = "data"               # "data" | "ctrl"  (paper §3.6)
     routes: List[RouteEntry] = dataclasses.field(default_factory=list)
+    # per-tile configuration knobs (the paper's per-element XML attributes;
+    # e.g. cc_policy on tcp_rx) — read by the tile's init hook at compile
+    params: Dict[str, object] = dataclasses.field(default_factory=dict)
 
     @property
     def coord(self) -> Coord:
@@ -60,8 +63,8 @@ class TopologyConfig:
 
     # ---- construction helpers (the "XML" the user writes) -----------------
     def add_tile(self, name: str, kind: str, x: int, y: int,
-                 noc: str = "data") -> TileDecl:
-        t = TileDecl(name, kind, x, y, noc)
+                 noc: str = "data", params: Optional[Dict] = None) -> TileDecl:
+        t = TileDecl(name, kind, x, y, noc, params=dict(params or {}))
         self.tiles.append(t)
         return t
 
@@ -189,6 +192,7 @@ class TopologyConfig:
             "tiles": [{
                 "name": t.name, "kind": t.kind, "x": t.x, "y": t.y,
                 "noc": t.noc,
+                **({"params": dict(t.params)} if t.params else {}),
                 "routes": [dataclasses.asdict(r) for r in t.routes],
             } for t in self.tiles],
             "chains": self.chains,
@@ -199,7 +203,7 @@ class TopologyConfig:
         topo = cls(d["name"], d["dim_x"], d["dim_y"])
         for td in d["tiles"]:
             t = topo.add_tile(td["name"], td["kind"], td["x"], td["y"],
-                              td.get("noc", "data"))
+                              td.get("noc", "data"), td.get("params"))
             for r in td.get("routes", []):
                 t.routes.append(RouteEntry(r["match"], r["key"],
                                            r["next_tile"]))

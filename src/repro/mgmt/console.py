@@ -15,9 +15,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import control
+from repro.core import control, telemetry
 from repro.net import frames as F
 from repro.net import rpc
+from repro.transport import cc as ccmod
 
 ETH_HLEN, IP_HLEN, UDP_HLEN = 14, 20, 8
 
@@ -36,21 +37,27 @@ def parse_response(frame: bytes) -> Dict:
     """Parse one management reply frame into {op, version, status, row,
     req_id}.  `row` is the LOG_READ counter payload [step, packets_in,
     drops, noc_latency, tile_index].  Replies may be Ethernet- or
-    IP-level (the TCP stack's TX boundary emits IP frames): an IP-level
-    frame starts with an IPv4 version nibble AND its total-length field
-    covers the whole frame (an Ethernet frame carries 14 extra bytes, so
-    a MAC happening to start with 0x4_ cannot satisfy both)."""
-    is_ip = (frame[0] >> 4 == 4
-             and struct.unpack_from("!H", frame, 2)[0] == len(frame))
-    l2 = 0 if is_ip else ETH_HLEN
-    rpc_off = l2 + IP_HLEN + UDP_HLEN
+    IP-level (`frames.l2_offset` disambiguates)."""
+    rpc_off = F.l2_offset(frame) + IP_HLEN + UDP_HLEN
     req_id = struct.unpack_from("!I", frame, rpc_off + 3)[0]
-    w = struct.unpack_from(f"!{control.RESP_WORDS}I", frame,
-                           rpc_off + rpc.HLEN)
-    return {"op": w[0], "version": w[1], "status": w[2],
-            "row": {"step": w[3], "packets_in": w[4], "drops": w[5],
-                    "noc_latency": w[6], "tile_index": w[7]},
-            "req_id": req_id}
+    body = rpc_off + rpc.HLEN
+    nwords = min(control.RESP_WORDS, (len(frame) - body) // 4)
+    w = list(struct.unpack_from(f"!{nwords}I", frame, body))
+    w += [0] * (control.RESP_WORDS - nwords)   # dropped range: 3-word body
+    out = {"op": w[0], "version": w[1], "status": w[2],
+           "row": {"step": w[3], "packets_in": w[4], "drops": w[5],
+                   "noc_latency": w[6], "tile_index": w[7]},
+           "req_id": req_id}
+    if w[0] == control.OP_LOG_READ_RANGE:
+        # bulk readback: status = served row count, then 5 words per row
+        served = min(w[2], control.MAX_RANGE)
+        rows = []
+        for k in range(served):
+            rows.append(list(struct.unpack_from(
+                "!5I", frame, body + 12 + 4 * control.ROW_WORDS * k)))
+        out["rows"] = rows
+        out["row"] = {}
+    return out
 
 
 class MgmtConsole:
@@ -134,11 +141,73 @@ class MgmtConsole:
             (control.OP_HEALTH_SET, self.group_ids[group], replica, 1, 0)])
         return state, r
 
+    def set_rate(self, state, slot: int, port: int, rate: int,
+                 burst: Optional[int] = None):
+        """Install a per-port token bucket at the dispatch tile: `rate`
+        packets per batch, bucket capacity `burst` (default = rate)."""
+        packed = (rate & 0xFFFF) | (((burst or 0) & 0xFFFF) << 16)
+        state, (r,) = self.roundtrip(state, [
+            (control.OP_RATE_SET, 0, slot, port, packed)])
+        return state, r
+
+    def clear_rate(self, state, slot: int):
+        """Remove one token bucket: the port becomes unlimited again."""
+        state, (r,) = self.roundtrip(state, [
+            (control.OP_RATE_SET, 0, slot, -1, 0)])
+        return state, r
+
+    def set_cc_policy(self, state, policy: str):
+        """Switch the TCP engine's congestion-control policy live."""
+        state, (r,) = self.roundtrip(state, [
+            (control.OP_CC_SET, 0, 0, ccmod.POLICIES[policy], 0)])
+        return state, r
+
+    def set_cc_window(self, state, conn: int, cwnd: Optional[int] = None,
+                      ssthresh: Optional[int] = None):
+        """Override one connection's cwnd and/or ssthresh."""
+        cmds = []
+        if cwnd is not None:
+            cmds.append((control.OP_CC_SET, conn, 1, cwnd, 0))
+        if ssthresh is not None:
+            cmds.append((control.OP_CC_SET, conn, 2, ssthresh, 0))
+        state, rs = self.roundtrip(state, cmds)
+        return state, rs
+
     # ---- readback --------------------------------------------------------
+    def log_ids(self, state) -> Dict[str, int]:
+        """The runtime log-id namespace: node logs first (id == node
+        index), then extra logs (per-connection CC logs) — the same order
+        the compiled mgmt tile serves (`telemetry.log_order`)."""
+        logs = state.get("telemetry", {}).get("logs", {})
+        order = telemetry.log_order(list(self.node_ids), logs)
+        return {n: i for i, n in enumerate(order)}
+
     def read_counters(self, state, tile: str, age: int = 0):
         """One tile's telemetry counter row, `age` batches back."""
         state, (r,) = self.roundtrip(state, [
             (control.OP_LOG_READ, 0, self.node_ids[tile], age, 0)])
+        return state, r
+
+    def read_log_range(self, state, tile: str, start: int = 0,
+                       count: int = control.MAX_RANGE):
+        """Bulk counter streaming: up to MAX_RANGE rows (newest-first
+        from age `start`) of one log in a single in-band round trip."""
+        state, (r,) = self.roundtrip(state, [
+            (control.OP_LOG_READ_RANGE, 0, self.log_ids(state)[tile],
+             start, count)])
+        return state, r
+
+    def read_cc(self, state, conn: int, age: int = 0):
+        """One connection's congestion-control counters (cwnd, ssthresh,
+        srtt, retx, marks) from its tcp_cc.<conn> RingLog."""
+        state, (r,) = self.roundtrip(state, [
+            (control.OP_LOG_READ, 0,
+             self.log_ids(state)[ccmod.log_name(conn)], age, 0)])
+        if r["status"] == 1:
+            row = r["row"]
+            r["cc"] = ccmod.unpack_row([row["step"], row["packets_in"],
+                                        row["drops"], row["noc_latency"],
+                                        row["tile_index"]])
         return state, r
 
     def version(self, state) -> Tuple[Dict, int]:

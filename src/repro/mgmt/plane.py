@@ -163,13 +163,26 @@ def mgmt_tile(state, carrier, pred, ctx):
               else jnp.zeros((1, slots), jnp.int32))
 
     telem = state.get("telemetry")
-    lnames = [n for n in pm["order"]
-              if telem is not None and n in telem["logs"]]
+    # canonical log-id namespace (shared with MgmtConsole): pipeline nodes
+    # first, then extra logs — e.g. the per-connection tcp_cc.* CC logs
+    lnames = (telemetry.log_order(pm["order"], telem["logs"])
+              if telem is not None else [])
     n_logs = len(lnames)
     ents = (jnp.stack([telem["logs"][n].entries for n in lnames]) if n_logs
             else jnp.zeros((1, 1, telemetry.LOG_WIDTH), jnp.int32))
     wrs = (jnp.stack([telem["logs"][n].wr for n in lnames]) if n_logs
            else jnp.zeros((1,), jnp.int32))
+
+    # dispatch-side token buckets + congestion-control knobs (if present)
+    has_rate = "rate" in state
+    rate0 = (state["rate"] if has_rate
+             else {k: jnp.zeros((1,), jnp.int32)
+                   for k in ("ports", "rate", "burst", "tokens")})
+    cc0 = (state.get("conn") or {}).get("cc")
+    has_cc = cc0 is not None
+    cc_cwnd0 = cc0["cwnd"] if has_cc else jnp.zeros((1,), jnp.int32)
+    cc_ssth0 = cc0["ssthresh"] if has_cc else jnp.zeros((1,), jnp.int32)
+    cc_pol0 = cc0["policy"] if has_cc else jnp.zeros((), jnp.int32)
 
     ctrlst = state["mgmt"]["ctrl"]
     carry0 = {
@@ -178,9 +191,17 @@ def mgmt_tile(state, carrier, pred, ctx):
         "nat_virt": nat_virt, "nat_phys": nat_phys,
         "healthy": healthy0,
         "tkeys": tkeys0, "tvals": tvals0,
+        "rate": dict(rate0),
+        "cc_cwnd": cc_cwnd0, "cc_ssth": cc_ssth0, "cc_pol": cc_pol0,
         # outstanding readbacks were serviced between batches (drain)
         "fills": jnp.zeros((max(n_logs, 1),), jnp.int32),
     }
+
+    # a range response must fit the reply body: never serve more rows
+    # than the carrier can carry back (the served count IS the layout)
+    body_w = carrier["out_body"].shape[1]
+    max_fit = max(0, min(control.MAX_RANGE,
+                         (body_w - 12) // (4 * control.ROW_WORDS)))
 
     def step(c, xs):
         w, v = xs
@@ -218,35 +239,92 @@ def mgmt_tile(state, carrier, pred, ctx):
         tkeys = jnp.where(route_ok, tk, c["tkeys"])
         tvals = jnp.where(route_ok, tv, c["tvals"])
 
+        # RATE_SET — install / clear one dispatch token bucket
+        rt = c["rate"]
+        n_slots = rt["ports"].shape[0]
+        is_rate = v & (op == control.OP_RATE_SET) & has_rate
+        rate_ok = is_rate & (a >= 0) & (a < n_slots)
+        rs = jnp.clip(a, 0, n_slots - 1)
+        clear = b == -1
+        new_port = jnp.where(clear, -1, b)
+        new_rate = jnp.where(clear, 0, cc & 0xFFFF)
+        new_burst = jnp.where(clear, 0,
+                              jnp.where(((cc >> 16) & 0xFFFF) > 0,
+                                        (cc >> 16) & 0xFFFF, cc & 0xFFFF))
+        rate = {
+            "ports": jnp.where(rate_ok, rt["ports"].at[rs].set(new_port),
+                               rt["ports"]),
+            "rate": jnp.where(rate_ok, rt["rate"].at[rs].set(new_rate),
+                              rt["rate"]),
+            "burst": jnp.where(rate_ok, rt["burst"].at[rs].set(new_burst),
+                               rt["burst"]),
+            # a rewritten bucket starts full
+            "tokens": jnp.where(rate_ok, rt["tokens"].at[rs].set(new_burst),
+                                rt["tokens"]),
+        }
+
+        # CC_SET — live congestion-control knobs (engine must have CC)
+        is_cc = v & (op == control.OP_CC_SET) & has_cc
+        n_conns = c["cc_cwnd"].shape[0]
+        conn_ok = (target >= 0) & (target < n_conns)
+        ci = jnp.clip(target, 0, n_conns - 1)
+        pol_ok = is_cc & (a == 0) & ((b == 0) | (b == 1))
+        cwnd_ok = is_cc & (a == 1) & conn_ok & (b > 0)
+        ssth_ok = is_cc & (a == 2) & conn_ok & (b > 0)
+        cc_pol = jnp.where(pol_ok, b, c["cc_pol"])
+        cc_cwnd = jnp.where(cwnd_ok, c["cc_cwnd"].at[ci].set(b),
+                            c["cc_cwnd"])
+        cc_ssth = jnp.where(ssth_ok, c["cc_ssth"].at[ci].set(b),
+                            c["cc_ssth"])
+        cc_ok = pol_ok | cwnd_ok | ssth_ok
+
         # LOG_READ — serve a counter row, REQ_BUF backpressure
         want = v & (op == control.OP_LOG_READ) & (n_logs > 0)
         fills, row, accepted = control.serve_log_read(
             ents, wrs, c["fills"], a, b.astype(jnp.int32), want)
 
+        # LOG_READ_RANGE — bulk streaming: many rows, one response frame
+        want_rng = v & (op == control.OP_LOG_READ_RANGE) & (n_logs > 0)
+        fills, rng_rows, served = control.serve_log_read_range(
+            ents, wrs, fills, a, b.astype(jnp.int32),
+            jnp.minimum(cc.astype(jnp.int32), max_fit), want_rng)
+
         is_ver = v & (op == control.OP_VERSION)
-        applied = nat_ok | health_ok | route_ok
+        applied = nat_ok | health_ok | route_ok | rate_ok | cc_ok
         version = c["version"] + applied.astype(jnp.int32)
         status = (applied | accepted | is_ver).astype(jnp.uint32)
-        resp = control.encode_response(w[0], version, status, row)
+        plain = control.encode_response(w[0], version, status, row)
+        plain = jnp.concatenate([
+            plain, jnp.zeros((control.RANGE_RESP_WORDS
+                              - control.RESP_WORDS,), jnp.uint32)])
+        rng = control.encode_range_response(w[0], version, served, rng_rows)
+        resp = jnp.where(want_rng, rng, plain)
+        blen = jnp.where(
+            want_rng,
+            12 + 4 * control.ROW_WORDS * served,
+            jnp.full_like(served, control.RESP_BYTES)).astype(jnp.int32)
 
         nc = {"version": version,
               "last_op": jnp.where(applied, op, c["last_op"]),
               "acks": c["acks"] + v.astype(jnp.int32),
               "nat_virt": nat_virt, "nat_phys": nat_phys,
               "healthy": healthy, "tkeys": tkeys, "tvals": tvals,
+              "rate": rate,
+              "cc_cwnd": cc_cwnd, "cc_ssth": cc_ssth, "cc_pol": cc_pol,
               "fills": fills}
-        return nc, resp
+        return nc, (resp, blen)
 
-    carry, resps = jax.lax.scan(step, carry0, (words, valid))
+    carry, (resps, blens) = jax.lax.scan(step, carry0, (words, valid))
 
-    # ---- responses: fixed 8-word ack / readback bodies ----------------
+    # ---- responses: ack / readback bodies (range reads are longer) ----
     rb = carrier["out_body"]
-    for i in range(control.RESP_WORDS):
-        rb = B.set_be32(rb, 4 * i, resps[:, i])
+    body_w = rb.shape[1]
+    for i in range(control.RANGE_RESP_WORDS):
+        if 4 * (i + 1) <= body_w:
+            rb = B.set_be32(rb, 4 * i, resps[:, i])
     carrier["out_body"] = jnp.where(pred[:, None], rb, carrier["out_body"])
     carrier["out_blen"] = jnp.where(
-        pred, jnp.full_like(carrier["out_blen"], control.RESP_BYTES),
-        carrier["out_blen"])
+        pred, jnp.minimum(blens, body_w), carrier["out_blen"])
     info = dict(carrier["info"])
     info["mgmt"] = pred
     carrier["info"] = info
@@ -272,5 +350,16 @@ def mgmt_tile(state, carrier, pred, ctx):
             staged["routes"][t] = RouteTable(
                 keys=carry["tkeys"][i], values=carry["tvals"][i],
                 default=rts[t].default)
+    if has_rate:
+        staged["rate"] = carry["rate"]
+    if has_cc:
+        # full cc block with the knob writes folded in: the mgmt tile runs
+        # after tcp_rx (declaration order), so this batch's ACK-driven
+        # updates are already in cc0 and survive the commit
+        cc_new = dict(cc0)
+        cc_new["cwnd"] = carry["cc_cwnd"]
+        cc_new["ssthresh"] = carry["cc_ssth"]
+        cc_new["policy"] = carry["cc_pol"]
+        staged["cc"] = cc_new
     carrier["mgmt_staged"] = staged
     return state, carrier, None

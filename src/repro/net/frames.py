@@ -91,3 +91,15 @@ def to_batch(frames, max_len: int = 512):
 def ip(a: str) -> int:
     parts = [int(x) for x in a.split(".")]
     return (parts[0] << 24) | (parts[1] << 16) | (parts[2] << 8) | parts[3]
+
+
+def l2_offset(frame: bytes) -> int:
+    """Where the IPv4 header starts: 0 for an IP-level frame, 14 for
+    Ethernet.  Frames may be either (the TCP stack's TX boundary emits IP
+    frames): an IP-level frame starts with an IPv4 version nibble AND its
+    total-length field covers the whole frame — an Ethernet frame carries
+    14 extra bytes, so a MAC that happens to start with 0x4_ cannot
+    satisfy both."""
+    is_ip = (frame[0] >> 4 == 4
+             and struct.unpack_from("!H", frame, 2)[0] == len(frame))
+    return 0 if is_ip else 14

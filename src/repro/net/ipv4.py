@@ -16,6 +16,7 @@ def parse(payload, length):
     ver_ihl = B.u8(payload, 0)
     version = ver_ihl >> 4
     ihl = (ver_ihl & 0xF).astype(jnp.int32) * 4
+    ecn = B.u8(payload, 1) & 0x3          # RFC 3168 ECN field (3 = CE)
     total_len = B.be16(payload, 2)
     ttl = B.u8(payload, 8)
     proto = B.u8(payload, 9)
@@ -26,7 +27,7 @@ def parse(payload, length):
          (total_len.astype(jnp.int32) <= length)
     stripped = B.shift_left(payload, ihl)
     meta = {"ip_proto": proto, "src_ip": src_ip, "dst_ip": dst_ip,
-            "ip_ttl": ttl, "ip_total_len": total_len}
+            "ip_ttl": ttl, "ip_total_len": total_len, "ip_ecn": ecn}
     return stripped, total_len.astype(jnp.int32) - ihl, meta, ok
 
 

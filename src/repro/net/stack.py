@@ -195,7 +195,12 @@ class UdpStack:
 # TCP stack with optional NAT (live migration)
 
 
-def tcp_topology(with_nat: bool = False, name="tcp-stack") -> TopologyConfig:
+def tcp_topology(with_nat: bool = False, name="tcp-stack",
+                 cc_policy: Optional[str] = None) -> TopologyConfig:
+    """``cc_policy`` ("newreno" | "dctcp") is a *tile parameter* on the
+    tcp_rx TileDecl — the congestion-control engine is selected by
+    configuration, exactly like inserting NAT; None keeps the seed
+    engine bit-identically."""
     topo = TopologyConfig(name, 6, 2)
     topo.add_tile("eth_rx", "eth_rx", 0, 0)
     topo.add_tile("ip_rx", "ip_rx", 1, 0)
@@ -204,7 +209,8 @@ def tcp_topology(with_nat: bool = False, name="tcp-stack") -> TopologyConfig:
         topo.add_tile("nat_rx", "nat_rx", 2, 0)
         topo.add_tile("nat_tx", "nat_tx", 2, 1)
         x = 3
-    topo.add_tile("tcp_rx", "tcp_rx", x, 0)
+    topo.add_tile("tcp_rx", "tcp_rx", x, 0,
+                  params=({"cc_policy": cc_policy} if cc_policy else None))
     topo.add_tile("tcp_tx", "tcp_tx", x, 1)
     topo.add_tile("ip_tx", "ip_tx", 1, 1)
     topo.add_tile("eth_tx", "eth_tx", 0, 1)
@@ -238,8 +244,11 @@ class TcpStack:
                  nat_entries=None, max_conns: int = 16,
                  topo: Optional[TopologyConfig] = None,
                  with_telemetry: bool = True,
-                 mgmt_port: Optional[int] = None):
-        self.topo = topo if topo is not None else tcp_topology(with_nat)
+                 mgmt_port: Optional[int] = None,
+                 cc_policy: Optional[str] = None,
+                 options: Optional[dict] = None):
+        self.topo = topo if topo is not None else \
+            tcp_topology(with_nat, cc_policy=cc_policy)
         self.with_nat = with_nat
         self.local_ip = local_ip
         self.max_conns = max_conns
@@ -249,9 +258,10 @@ class TcpStack:
         self.mgmt_meta = None
         if mgmt_port is not None:
             self.mgmt_meta = _bind_or_check_mgmt(self.topo, mgmt_port)
-        self.compiler = StackCompiler(
-            self.topo, options={"local_ip": local_ip, "max_conns": max_conns,
-                                "nat_entries": self.nat_entries})
+        opts = {"local_ip": local_ip, "max_conns": max_conns,
+                "nat_entries": self.nat_entries}
+        opts.update(options or {})
+        self.compiler = StackCompiler(self.topo, options=opts)
         self.rx_pipe = self.compiler.compile("eth_rx")
         self.tx_pipe = self.compiler.compile("tcp_tx")
         self.ctrl_pipe = None

@@ -2,9 +2,19 @@
 
 Scope matches the paper's prototype: accepts connections (3-way handshake),
 generates sequence/ACK numbers, window-based flow control, fast retransmit
-on 3 dup-ACKs, and timer retransmit.  No SACK, no active open, no
-congestion control (documented paper limitations).  RX and TX share state,
-mirroring the paper's dedicated-wire coupling of the TCP RX/TX tiles.
+on 3 dup-ACKs, and timer retransmit.  No SACK, no active open (documented
+paper limitations).  RX and TX share state, mirroring the paper's
+dedicated-wire coupling of the TCP RX/TX tiles.
+
+Congestion control — the paper's other stated limitation — is supplied by
+:mod:`repro.transport.cc` and is *optional*: pass ``cc_policy=`` to
+:func:`init` (the ``tcp_rx`` tile parameter does this in compiled stacks)
+and the connection table gains a nested ``conn["cc"]`` block of per-conn
+arrays (cwnd/ssthresh/RTT estimator/recovery state).  Without it the
+engine is bit-identical to the seed prototype.  With it, ``tx_emit``
+gates on min(cwnd, peer window), ACK processing drives NewReno or
+DCTCP-style ECN, ``tick`` runs the adaptive RTO, and the engine echoes
+ECE on acks for CE-marked segments.
 
 The engine is a connection *table* — all state is fixed-shape arrays, so a
 connection can be serialized / reinstalled for live migration (paper §6.7)
@@ -28,10 +38,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.net import bytesops as B
+from repro.transport import cc as ccmod
 
 CLOSED, SYN_RCVD, ESTABLISHED = 0, 1, 2
 TCP_HLEN = 20
 FIN, SYN, RST, PSH, ACK = 0x01, 0x02, 0x04, 0x08, 0x10
+ECE, CWR = 0x40, 0x80                     # RFC 3168 echo bits
 
 U32 = jnp.uint32
 
@@ -40,14 +52,24 @@ def _u32(x):
     return jnp.asarray(x).astype(U32)
 
 
+def _seq_lt(a, b):
+    """Wrap-safe sequence-space a < b."""
+    return ((a - b) >> 31) != 0
+
+
 def init(max_conns: int = 16, rx_buf: int = 4096, tx_buf: int = 4096,
-         local_ip: int = 0x0A000001):
+         local_ip: int = 0x0A000001, cc_policy=None, mss: int = 1460):
+    """Connection-table state.  ``cc_policy`` ("newreno" | "dctcp" | None)
+    attaches the congestion-control block; None keeps the seed engine."""
     C = max_conns
     z32 = jnp.zeros((C,), U32)
     zi = jnp.zeros((C,), jnp.int32)
-    return {
+    conn = {
         "state": zi, "remote_ip": z32, "remote_port": z32,
         "local_port": z32, "rcv_nxt": z32, "snd_nxt": z32, "snd_una": z32,
+        # snd_max = highest sequence ever sent: go-back-N rolls snd_nxt
+        # back, but ACKs for data sent before the rollback stay acceptable
+        "snd_max": z32,
         "snd_wnd": z32 + 65535, "dup_acks": zi, "retx_timer": zi,
         "iss": z32, "irs": z32,
         "rx_buf": jnp.zeros((C, rx_buf), jnp.uint8),
@@ -57,6 +79,9 @@ def init(max_conns: int = 16, rx_buf: int = 4096, tx_buf: int = 4096,
         "local_ip": _u32(local_ip),
         "accepts": jnp.zeros((), jnp.int32),   # completed handshakes
     }
+    if cc_policy is not None:
+        conn["cc"] = ccmod.init(C, mss=mss, policy=cc_policy)
+    return conn
 
 
 # ---------------------------------------------------------------------------
@@ -71,7 +96,7 @@ def parse_segment(payload, length, meta):
     ack = B.be32(payload, 8)
     off_flags = B.be16(payload, 12)
     doff = ((off_flags >> 12) & 0xF).astype(jnp.int32) * 4
-    flags = off_flags & 0x3F
+    flags = off_flags & 0xFF              # low byte incl. ECE/CWR echoes
     wnd = B.be16(payload, 14)
     data = B.shift_left(payload, doff)
     m = dict(meta)
@@ -155,19 +180,44 @@ def rx_one(conn: Dict, seg: Dict, data_row, dlen):
     # ---- ACK processing (flow control + fast retransmit) -----------------
     snd_una = conn["snd_una"][i]
     snd_nxt = conn["snd_nxt"][i]
+    snd_max = conn["snd_max"][i]
     ack_ok = is_ack & (st == ESTABLISHED)
-    # sequence-space compare on u32 (wrap-safe): a<b via (a-b)>>31
-    advanced = ack_ok & (((snd_una - seg["tcp_ack"]) >> 31) != 0) \
-        & (((seg["tcp_ack"] - snd_nxt - 1) >> 31) != 0)
+    # acceptable ACKs cover anything ever sent (snd_una, snd_max] — after
+    # a go-back-N rollback snd_nxt may sit below in-flight ACKs
+    advanced = ack_ok & _seq_lt(snd_una, seg["tcp_ack"]) \
+        & ~_seq_lt(snd_max, seg["tcp_ack"])
     new_una = jnp.where(advanced, seg["tcp_ack"], snd_una)
     # handshake completion acknowledges our SYN: snd_una := iss+1
     new_una = jnp.where(established, seg["tcp_ack"], new_una)
+    # an ACK past a rolled-back snd_nxt also re-advances transmission
+    snd_nxt = jnp.where(advanced & _seq_lt(snd_nxt, seg["tcp_ack"]),
+                        seg["tcp_ack"], snd_nxt)
     dup = ack_ok & (seg["tcp_ack"] == snd_una) & (dlen == 0) & \
-        (snd_nxt != snd_una)
+        (snd_max != snd_una)
     dup_acks = jnp.where(advanced, 0,
                          conn["dup_acks"][i] + dup.astype(jnp.int32))
-    fast_retx = dup_acks >= 3
-    dup_acks = jnp.where(fast_retx, 0, dup_acks)
+    # fire on exactly the third duplicate (RFC 5681) and keep counting:
+    # re-arming only on an advancing ACK stops the same loss event's
+    # trailing dup-ACKs from re-triggering retransmission every 3
+    fast_retx = dup & (dup_acks == 3)
+
+    # ---- congestion control (repro.transport.cc, optional) ---------------
+    cc = conn.get("cc")
+    ece_echo = jnp.zeros((), bool)
+    partial = jnp.zeros((), bool)
+    if cc is not None:
+        ece = (flags & ECE) != 0
+        acked = jnp.where(advanced, seg["tcp_ack"] - snd_una, U32(0))
+        cc, exit_rec, partial = ccmod.on_ack(
+            cc, i, est=act & ack_ok, advanced=act & advanced,
+            acked=acked, fast_retx=act & fast_retx, ece=ece,
+            ack_seq=seg["tcp_ack"], high_seq=snd_max,
+            flight=(snd_max - snd_una).astype(jnp.int32))
+        # NewReno leaves recovery on the full ACK: dup-ACK counting restarts
+        dup_acks = jnp.where(exit_rec, 0, dup_acks)
+        # receiver side: echo CE marks back to the peer on our ACKs
+        ce = seg.get("ip_ecn", jnp.zeros((), U32)) == 3
+        ece_echo = (st == ESTABLISHED) & (dlen > 0) & ce
 
     # ---- in-order data --------------------------------------------------
     rcv_nxt = jnp.where(new_conn, seg["tcp_seq"] + 1, conn["rcv_nxt"][i])
@@ -194,6 +244,8 @@ def rx_one(conn: Dict, seg: Dict, data_row, dlen):
 
     upd = lambda a, v: a.at[i].set(jnp.where(act, v, a[i]))
     conn = dict(conn)
+    if cc is not None:
+        conn["cc"] = cc
     conn["state"] = upd(conn["state"], new_state)
     conn["remote_ip"] = upd(conn["remote_ip"], seg["src_ip"])
     conn["remote_port"] = upd(conn["remote_port"], seg["src_port"])
@@ -204,8 +256,14 @@ def rx_one(conn: Dict, seg: Dict, data_row, dlen):
     conn["snd_una"] = upd(conn["snd_una"], jnp.where(new_conn, iss, new_una))
     conn["snd_nxt"] = upd(conn["snd_nxt"],
                           jnp.where(new_conn, iss + 1, snd_nxt))
+    conn["snd_max"] = upd(conn["snd_max"],
+                          jnp.where(new_conn, iss + 1, snd_max))
     conn["snd_wnd"] = upd(conn["snd_wnd"], seg["tcp_wnd"])
     conn["dup_acks"] = upd(conn["dup_acks"], dup_acks)
+    # an advancing ACK restarts the retransmit timer (RFC 6298 5.3) —
+    # without this, any transfer longer than the RTO hits a spurious RTO
+    conn["retx_timer"] = upd(conn["retx_timer"],
+                             jnp.where(advanced, 0, conn["retx_timer"][i]))
     conn["rx_base"] = upd(conn["rx_base"],
                           jnp.where(new_conn, seg["tcp_seq"] + 1,
                                     conn["rx_base"][i]))
@@ -220,13 +278,16 @@ def rx_one(conn: Dict, seg: Dict, data_row, dlen):
     emit = act & (do_synack | want_ack)
     resp = {
         "emit": emit,
-        "fast_retx": act & fast_retx,
+        # partial ACKs in fast recovery retransmit again (NewReno)
+        "fast_retx": act & (fast_retx | partial),
         "conn": i,
         "src_ip": seg["dst_ip"], "dst_ip": seg["src_ip"],
         "src_port": seg["dst_port"], "dst_port": seg["src_port"],
         "tcp_seq": jnp.where(do_synack, iss, conn["snd_nxt"][i]),
         "tcp_ack": rcv_nxt2,
-        "tcp_flags": jnp.where(do_synack, U32(SYN | ACK), U32(ACK)),
+        "tcp_flags": jnp.where(
+            do_synack, U32(SYN | ACK),
+            U32(ACK) | jnp.where(ece_echo, U32(ECE), U32(0))),
         "tcp_wnd": U32(65535) - (rcv_nxt2 - conn["rx_base"][i]),
         "established": established,
     }
@@ -245,6 +306,8 @@ def rx_batch(conn: Dict, data, dlen, meta):
     metas = {k: meta[k] for k in ("src_ip", "dst_ip", "src_port", "dst_port",
                                   "tcp_seq", "tcp_ack", "tcp_flags",
                                   "tcp_wnd")}
+    # ECN field rides along for the CC engine (absent in legacy callers)
+    metas["ip_ecn"] = meta.get("ip_ecn", jnp.zeros_like(metas["tcp_seq"]))
     conn, resps = jax.lax.scan(step, conn, (data, dlen, metas))
     return conn, resps
 
@@ -295,15 +358,34 @@ def app_send(conn, i, data, n):
 
 
 def tx_emit(conn, i, mss: int = 1460, retransmit=False):
-    """Emit one data segment for conn i: [snd_nxt, snd_nxt+len) from the tx
-    buffer (or from snd_una when retransmitting), respecting the peer
-    window.  Returns (conn', seg_meta, data (mss,), dlen)."""
+    """Emit one data segment for conn i from the tx buffer, respecting the
+    send window — min(peer window, cwnd) when the CC engine is attached.
+    Returns (conn', seg_meta, data (mss,), dlen).
+
+    The two recovery paths are distinct (they used to share one flag):
+
+    * ``retransmit="fast"`` (or True) — fast retransmit: resend exactly
+      one MSS from ``snd_una``; ``snd_nxt`` is untouched, so transmission
+      resumes where it left off once the hole is filled.
+    * ``retransmit="timer"`` — RTO go-back-N restart: resend from
+      ``snd_una`` AND roll ``snd_nxt`` back to the end of this segment,
+      so subsequent calls re-send the whole outstanding window.
+      (``tick`` already rolls ``snd_nxt`` fully back; this mode is for
+      drivers that retransmit explicitly without a tick.)
+    """
+    assert retransmit in (False, True, "fast", "timer"), retransmit
+    is_retx = bool(retransmit)
+    mode = "fast" if retransmit is True else retransmit
     iss = conn["iss"][i]
     base_seq = iss + 1                       # stream offset 0 in tx_buf
-    start = jnp.where(retransmit, conn["snd_una"][i], conn["snd_nxt"][i])
+    start = jnp.where(is_retx, conn["snd_una"][i], conn["snd_nxt"][i])
     staged_end = base_seq + conn["tx_staged"][i].astype(U32)
+    cc = conn.get("cc")
+    wnd_lim = conn["snd_wnd"][i].astype(jnp.int32)
+    if cc is not None:
+        wnd_lim = ccmod.effective_wnd(cc, i, conn["snd_wnd"][i])
     in_flight = (start - conn["snd_una"][i]).astype(jnp.int32)
-    wnd_room = conn["snd_wnd"][i].astype(jnp.int32) - in_flight
+    wnd_room = wnd_lim - in_flight
     avail = (staged_end - start).astype(jnp.int32)
     dlen = jnp.clip(jnp.minimum(avail, wnd_room), 0, mss)
     off = (start - base_seq).astype(jnp.int32)
@@ -312,9 +394,19 @@ def tx_emit(conn, i, mss: int = 1460, retransmit=False):
     data = jnp.where(jnp.arange(mss) < dlen, conn["tx_buf"][i][idx], 0)
     live = (conn["state"][i] == ESTABLISHED) & (dlen > 0)
     conn = dict(conn)
-    if not retransmit:
+    if mode == "timer":
+        # go-back-N restart: everything past this segment is re-sent
         conn["snd_nxt"] = conn["snd_nxt"].at[i].set(
             jnp.where(live, start + dlen.astype(U32), conn["snd_nxt"][i]))
+    elif not is_retx:
+        end = start + dlen.astype(U32)
+        conn["snd_nxt"] = conn["snd_nxt"].at[i].set(
+            jnp.where(live, end, conn["snd_nxt"][i]))
+        conn["snd_max"] = conn["snd_max"].at[i].set(
+            jnp.where(live & _seq_lt(conn["snd_max"][i], end), end,
+                      conn["snd_max"][i]))
+        if cc is not None:      # RTT sample only on new data (Karn)
+            conn["cc"] = ccmod.stamp_rtt(cc, i, end, live)
     seg = {
         "emit": live,
         "src_ip": conn["local_ip"], "dst_ip": conn["remote_ip"][i],
@@ -327,12 +419,22 @@ def tx_emit(conn, i, mss: int = 1460, retransmit=False):
 
 def tick(conn, timeout: int = 8):
     """Timer retransmit: bump per-conn timers; expired conns with unacked
-    data get snd_nxt rolled back to snd_una (go-back-N)."""
-    unacked = (conn["snd_nxt"] != conn["snd_una"]) & \
+    data get snd_nxt rolled back to snd_una (go-back-N).  With the CC
+    engine attached the expiry threshold is the per-connection adaptive
+    RTO (SRTT + 4*RTTVAR, exponentially backed off) and ``timeout`` is
+    ignored; an expiry collapses cwnd to one MSS."""
+    unacked = (conn["snd_max"] != conn["snd_una"]) & \
         (conn["state"] == ESTABLISHED)
     timers = jnp.where(unacked, conn["retx_timer"] + 1, 0)
-    expired = timers >= timeout
+    cc = conn.get("cc")
     conn = dict(conn)
+    if cc is None:
+        expired = timers >= timeout
+    else:
+        cc = ccmod.tick_clock(cc)
+        expired = timers >= cc["rto"]
+        flight = (conn["snd_max"] - conn["snd_una"]).astype(jnp.int32)
+        conn["cc"] = ccmod.on_timer(cc, expired, flight)
     conn["retx_timer"] = jnp.where(expired, 0, timers)
     conn["snd_nxt"] = jnp.where(expired, conn["snd_una"], conn["snd_nxt"])
     return conn, expired
@@ -343,15 +445,19 @@ def tick(conn, timeout: int = 8):
 
 
 _MIG_FIELDS = ("state", "remote_ip", "remote_port", "local_port", "rcv_nxt",
-               "snd_nxt", "snd_una", "snd_wnd", "dup_acks", "iss", "irs",
-               "rx_base", "rx_read", "tx_staged")
+               "snd_nxt", "snd_una", "snd_max", "snd_wnd", "dup_acks",
+               "iss", "irs", "rx_base", "rx_read", "tx_staged")
 
 
 def serialize_conn(conn, i):
-    """Extract connection i as a flat blob dict (device arrays)."""
+    """Extract connection i as a flat blob dict (device arrays).  The
+    congestion-control block travels with the connection: cwnd/RTT
+    estimator state survives migration like everything else."""
     blob = {k: conn[k][i] for k in _MIG_FIELDS}
     blob["rx_buf"] = conn["rx_buf"][i]
     blob["tx_buf"] = conn["tx_buf"][i]
+    if "cc" in conn:
+        blob["cc"] = {k: conn["cc"][k][i] for k in ccmod.PER_CONN}
     return blob
 
 
@@ -362,4 +468,9 @@ def install_conn(conn, i, blob):
         conn[k] = conn[k].at[i].set(blob[k].astype(conn[k].dtype))
     conn["rx_buf"] = conn["rx_buf"].at[i].set(blob["rx_buf"])
     conn["tx_buf"] = conn["tx_buf"].at[i].set(blob["tx_buf"])
+    if "cc" in conn and "cc" in blob:
+        cc = dict(conn["cc"])
+        for k in ccmod.PER_CONN:
+            cc[k] = cc[k].at[i].set(blob["cc"][k].astype(cc[k].dtype))
+        conn["cc"] = cc
     return conn

@@ -18,8 +18,10 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import telemetry
 from repro.core.compiler import register_tile
 from repro.net import eth, ipinip, ipv4, nat as nat_mod, rpc, tcp, udp
+from repro.transport import cc as ccmod, rate as rate_mod
 
 # ---------------------------------------------------------------------------
 # RX protocol tiles
@@ -41,10 +43,17 @@ def ip_rx(state, carrier, pred, ctx):
     return state, carrier, ok
 
 
-@register_tile("udp_rx", alive=True)
+def _udp_init(ctx):
+    # dispatch-side token buckets (mgmt RATE_SET); empty table = unlimited
+    return {"rate": rate_mod.init()}
+
+
+@register_tile("udp_rx", init=_udp_init, alive=True)
 def udp_rx(state, carrier, pred, ctx):
     """UDP parse + RPC deframing (the app-facing boundary of the paper's
-    UDP tile: apps receive framed request bodies, not raw datagrams)."""
+    UDP tile: apps receive framed request bodies, not raw datagrams).
+    Dispatch applies the per-port token buckets here: packets beyond a
+    rate-limited port's bucket drop exactly like a parse failure."""
     p, l, m, ok_udp = udp.parse(carrier["payload"], carrier["length"],
                                 carrier["meta"])
     body, blen, rmeta, ok_rpc = rpc.parse(p, l)
@@ -52,7 +61,14 @@ def udp_rx(state, carrier, pred, ctx):
     m.update(rmeta)
     carrier.update(payload=p, length=l, meta=m, body=body, blen=blen,
                    out_body=body, out_blen=blen)
-    return state, carrier, ok_udp & ok_rpc
+    ok = ok_udp & ok_rpc
+    if "rate" in state:
+        rt, ok_rate = rate_mod.apply(state["rate"], m["dst_port"],
+                                     pred & ok)
+        state = dict(state)
+        state["rate"] = rt
+        ok = ok & ok_rate
+    return state, carrier, ok
 
 
 def _nat_init(ctx):
@@ -88,8 +104,29 @@ def ipinip_decap(state, carrier, pred, ctx):
 
 
 def _tcp_init(ctx):
-    return {"conn": tcp.init(ctx.options.get("max_conns", 16),
-                             local_ip=ctx.options["local_ip"])}
+    """The CC policy is a *tile parameter* (``cc_policy`` on the tcp_rx
+    TileDecl; compiler option as fallback) — selecting NewReno vs the ECN
+    policy vs the bare seed engine is a topology edit, not an engine
+    fork.  When CC is on, every connection gets a ``tcp_cc.<i>`` RingLog
+    so cwnd/ssthresh/rtt/retx/marks are LOG_READ-able in-band."""
+    pol = None
+    for t in ctx.members:
+        pol = t.params.get("cc_policy", pol)
+    if pol is None:
+        pol = ctx.options.get("cc_policy")
+    max_conns = ctx.options.get("max_conns", 16)
+    st = {"conn": tcp.init(
+        max_conns, local_ip=ctx.options["local_ip"], cc_policy=pol,
+        mss=ctx.options.get("mss", 1460),
+        rx_buf=ctx.options.get("tcp_rx_buf", 4096),
+        tx_buf=ctx.options.get("tcp_tx_buf", 4096))}
+    if pol is not None:
+        st["telemetry"] = {
+            "step": jnp.zeros((), jnp.int32),
+            "logs": {ccmod.log_name(i):
+                     telemetry.make_log(telemetry.PIPE_LOG_ENTRIES)
+                     for i in range(max_conns)}}
+    return st
 
 
 @register_tile("tcp_rx", init=_tcp_init)
@@ -103,12 +140,24 @@ def tcp_rx(state, carrier, pred, ctx):
     data, dlen, m = tcp.parse_segment(carrier["payload"], carrier["length"],
                                       carrier["meta"])
     meng = dict(m)
-    for k in ("src_ip", "src_port", "dst_port", "tcp_flags"):
+    for k in ("src_ip", "src_port", "dst_port", "tcp_flags", "ip_ecn"):
         meng[k] = jnp.where(pred, m[k], jnp.zeros_like(m[k]))
     conn, resps = tcp.rx_batch(state["conn"], data,
                                jnp.where(pred, dlen, 0), meng)
     state = dict(state)
     state["conn"] = conn
+    cc = conn.get("cc")
+    telem = state.get("telemetry")
+    if cc is not None and telem is not None \
+            and ccmod.log_name(0) in telem["logs"]:
+        # append into the executor's per-run telemetry dict IN PLACE:
+        # replacing state["telemetry"] would orphan the dict the executor
+        # keeps appending node counter rows into
+        rows = ccmod.log_rows(cc, telem["step"])
+        for k in range(rows.shape[0]):
+            nm = ccmod.log_name(k)
+            telem["logs"][nm] = telemetry.append(
+                telem["logs"][nm], rows[k:k + 1], jnp.ones((1,), bool))
     carrier.update(meta=m, tcp_resps=resps)
     return state, carrier, None
 

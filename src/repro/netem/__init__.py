@@ -1,0 +1,25 @@
+"""Deterministic network-emulation harness.
+
+The stack has never been exercised under loss, delay, or reordering — the
+exact conditions a direct-attached accelerator faces on a datacenter
+fabric.  This package is the missing test substrate:
+
+  * :mod:`repro.netem.link` — a seedable, deterministic link emulator:
+    one-way delay + jitter, i.i.d. and Gilbert–Elliott burst loss,
+    reordering, token-based bandwidth shaping with a bounded queue and an
+    ECN CE-marking threshold.  Frames in, frames out, fully host-side
+    (numpy) — it composes between any two compiled stacks, or between a
+    stack and the Linux-client frame fixtures the tests already use.
+  * :mod:`repro.netem.host` — a scripted wire-format TCP client (the
+    "unmodified Linux client" of the interop tests, §4.4): active open,
+    cumulative ACKs, ECE echo of CE marks.
+  * :mod:`repro.netem.harness` — couples a compiled ``TcpStack`` to the
+    client through two links and runs tick-driven transfers, reporting
+    goodput / recovery-gap / stall statistics (``bench_tcp_loss``).
+"""
+from repro.netem.harness import StackEndpoint, TransferStats, run_transfer
+from repro.netem.host import LinuxTcpClient
+from repro.netem.link import GilbertElliott, Link, LinkConfig
+
+__all__ = ["GilbertElliott", "Link", "LinkConfig", "LinuxTcpClient",
+           "StackEndpoint", "TransferStats", "run_transfer"]

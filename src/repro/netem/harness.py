@@ -1,0 +1,185 @@
+"""Tick-driven transfer harness: a compiled TcpStack driving data to the
+scripted Linux client through two emulated links.
+
+The server side is the real compiled pipeline (``TcpStack.rx`` for
+inbound frames, ``TcpStack.tx_frame`` for every outbound segment, the
+engine's ``tick`` for the retransmit clock), so everything the stack does
+under loss — dup-ACK fast retransmit, RTO go-back-N, congestion-window
+gating, ECE reaction — is exercised through the same code the tests and
+benchmarks compile.  All JAX entry points are jitted once per harness
+with fixed shapes; the tick loop is plain Python, mirroring the paper's
+cycle-driven testbench.
+
+One tick is the unit of everything: link delay/jitter, serialization
+time under shaping, and the TCP engine's RTO all count the same clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.net import tcp
+from repro.netem.host import LinuxTcpClient
+from repro.netem.link import Link
+
+_META_FIELDS = ("src_ip", "dst_ip", "src_port", "dst_port", "tcp_seq",
+                "tcp_ack", "tcp_flags", "tcp_wnd")
+
+
+class StackEndpoint:
+    """Wraps one ``TcpStack`` (server / sender side) for the tick loop."""
+
+    def __init__(self, stack, conn: int = 0, mss: int = 512,
+                 batch: int = 4, rx_width: int = 128, burst: int = 4):
+        self.stack = stack
+        self.conn = conn
+        self.mss = mss
+        self.batch = batch
+        self.rx_width = rx_width
+        self.burst = burst
+        self.state = stack.init_state()
+        self._rx = jax.jit(lambda st, p, l: stack.rx(st, p, l))
+        self._tx_frame = jax.jit(
+            lambda st, m, d, dl: stack.tx_frame(st, m, d, dl))
+        self._tick = jax.jit(lambda c: tcp.tick(c))
+
+        def _padded(c, mode):
+            # 64B of tail headroom: the TX build chain prepends headers by
+            # shifting within a fixed width
+            c, seg, data, dlen = tcp.tx_emit(c, conn, mss=mss,
+                                             retransmit=mode)
+            return c, seg, jnp.pad(data, (0, 64)), dlen
+
+        self._emit = jax.jit(lambda c: _padded(c, False))
+        self._emit_fast = jax.jit(lambda c: _padded(c, "fast"))
+        self._ack_pad = jnp.zeros((64,), jnp.uint8)
+        self.frames_tx = 0
+
+    def reset(self):
+        self.state = self.stack.init_state()
+        self.frames_tx = 0
+
+    # ---- app side --------------------------------------------------------
+    def send_payload(self, payload: bytes):
+        """Stage the whole transfer in the connection's tx buffer."""
+        conn = self.state["conn"]
+        assert len(payload) <= int(tcp.app_tx_space(conn, self.conn)), \
+            "payload exceeds tx buffer: raise tcp_tx_buf in stack options"
+        arr = jnp.asarray(np.frombuffer(payload, np.uint8))
+        conn, ok = tcp.app_send(conn, self.conn, arr, len(payload))
+        assert bool(ok)
+        self.state["conn"] = conn
+
+    # ---- wire side -------------------------------------------------------
+    def _build(self, seg_meta, data, dlen) -> bytes:
+        q, ql = self._tx_frame(self.state, seg_meta, data, dlen)
+        self.frames_tx += 1
+        return bytes(np.asarray(q)[0, :int(np.asarray(ql)[0])].tobytes())
+
+    def push(self, frames: List[bytes], now: int) -> List[bytes]:
+        """Feed inbound frames through the compiled RX pipeline; returns
+        the stack's reply frames (SYN-ACKs / ACKs / fast retransmits)."""
+        out: List[bytes] = []
+        for i in range(0, len(frames), self.batch):
+            chunk = frames[i:i + self.batch]
+            p = np.zeros((self.batch, self.rx_width), np.uint8)
+            l = np.zeros((self.batch,), np.int32)
+            for k, f in enumerate(chunk):
+                p[k, :len(f)] = np.frombuffer(f, np.uint8)
+                l[k] = len(f)
+            self.state, resps = self._rx(self.state, jnp.asarray(p),
+                                         jnp.asarray(l))
+            emit = np.asarray(resps["emit"])
+            fast = np.asarray(resps["fast_retx"])
+            for r in range(len(chunk)):
+                if emit[r]:
+                    meta = {k: resps[k][r] for k in _META_FIELDS}
+                    out.append(self._build(meta, self._ack_pad,
+                                           jnp.zeros((), jnp.int32)))
+                if fast[r]:
+                    conn, seg, data, dlen = self._emit_fast(
+                        self.state["conn"])
+                    self.state["conn"] = conn
+                    if bool(seg["emit"]):
+                        meta = {k: seg[k] for k in _META_FIELDS}
+                        out.append(self._build(meta, data, dlen))
+        return out
+
+    def poll(self, now: int) -> List[bytes]:
+        """One engine tick: retransmit timer, then emit new segments up to
+        `burst` (window permitting)."""
+        out: List[bytes] = []
+        conn, _expired = self._tick(self.state["conn"])
+        self.state["conn"] = conn
+        for _ in range(self.burst):
+            conn, seg, data, dlen = self._emit(self.state["conn"])
+            self.state["conn"] = conn
+            if not bool(seg["emit"]):
+                break
+            meta = {k: seg[k] for k in _META_FIELDS}
+            out.append(self._build(meta, data, dlen))
+        return out
+
+    # ---- progress --------------------------------------------------------
+    def fully_acked(self) -> bool:
+        c = self.state["conn"]
+        return int(c["snd_una"][self.conn]) == int(c["snd_nxt"][self.conn])
+
+    def snd_nxt(self) -> int:
+        return int(self.state["conn"]["snd_nxt"][self.conn])
+
+
+@dataclasses.dataclass
+class TransferStats:
+    complete: bool
+    ticks: int
+    delivered: int
+    goodput: float              # payload bytes per tick
+    p99_gap: float              # p99 inter-advance gap at the client
+    max_gap: int
+    frames_tx: int
+    dup_acks: int
+    link_stats: dict
+
+
+def run_transfer(server: StackEndpoint, client: LinuxTcpClient,
+                 link_c2s: Link, link_s2c: Link, payload: bytes,
+                 max_ticks: int = 2000) -> TransferStats:
+    """Drive one server->client transfer to completion (or the tick
+    budget).  Complete means every payload byte was delivered in order at
+    the client AND every sequence number was acknowledged back
+    (``snd_una == snd_nxt`` — no permanent stall anywhere)."""
+    server.send_payload(payload)
+    link_c2s.send(client.syn_frame(), 0)
+    end = max_ticks
+    for t in range(1, max_ticks + 1):
+        for f in client.keepalive(t):
+            link_c2s.send(f, t)
+        inbound = link_c2s.deliver(t)
+        if inbound:
+            for f in server.push(inbound, t):
+                link_s2c.send(f, t)
+        if client.established:
+            for f in server.poll(t):
+                link_s2c.send(f, t)
+        for f in link_s2c.deliver(t):
+            for a in client.on_frame(f, t):
+                link_c2s.send(a, t)
+        if len(client.received) >= len(payload) and server.fully_acked():
+            end = t
+            break
+    complete = (bytes(client.received) == payload) and server.fully_acked()
+    adv = client.advance_ticks
+    gaps = np.diff(adv) if len(adv) > 1 else np.asarray([0])
+    return TransferStats(
+        complete=complete, ticks=end, delivered=len(client.received),
+        goodput=len(client.received) / max(end, 1),
+        p99_gap=float(np.percentile(gaps, 99)) if len(gaps) else 0.0,
+        max_gap=int(gaps.max()) if len(gaps) else 0,
+        frames_tx=server.frames_tx, dup_acks=client.dup_acks_sent,
+        link_stats={"s2c": dict(link_s2c.stats),
+                    "c2s": dict(link_c2s.stats)})

@@ -1,0 +1,128 @@
+"""Scripted wire-format TCP client — the "unmodified Linux client" end of
+the emulated path.
+
+All struct/bytes, no JAX: it speaks to the stack exactly like the golden-
+frame fixtures in the tests, but *statefully*, so it can drive the full
+handshake + lossy-transfer dynamics: active open, cumulative ACKs (with
+dup-ACKs for out-of-order arrivals, which is what arms the server's fast
+retransmit), tail-overlap acceptance for go-back-N retransmissions, and
+ECE echo when a delivered segment carries an IP CE mark.
+"""
+from __future__ import annotations
+
+import struct
+from typing import List, Optional
+
+from repro.net import frames as F
+from repro.net import tcp
+
+M32 = 0xFFFFFFFF
+
+
+def _delta(a: int, b: int) -> int:
+    """Signed sequence-space a - b (wrap-safe)."""
+    return ((a - b + (1 << 31)) & M32) - (1 << 31)
+
+
+def parse_tcp_frame(frame: bytes):
+    """Parse an Ethernet- or IP-level TCP frame into a field dict."""
+    off = F.l2_offset(frame)
+    ihl = (frame[off] & 0xF) * 4
+    ecn = frame[off + 1] & 0x3
+    total = struct.unpack_from("!H", frame, off + 2)[0]
+    proto = frame[off + 9]
+    src_ip, dst_ip = struct.unpack_from("!II", frame, off + 12)
+    t = off + ihl
+    sport, dport = struct.unpack_from("!HH", frame, t)
+    seq, ack = struct.unpack_from("!II", frame, t + 4)
+    doff = (frame[t + 12] >> 4) * 4
+    flags = frame[t + 13]
+    wnd = struct.unpack_from("!H", frame, t + 14)[0]
+    payload = frame[off + ihl + doff:off + total]
+    return {"proto": proto, "src_ip": src_ip, "dst_ip": dst_ip,
+            "src_port": sport, "dst_port": dport, "seq": seq, "ack": ack,
+            "flags": flags, "wnd": wnd, "payload": payload, "ecn": ecn}
+
+
+class LinuxTcpClient:
+    """Receiver-side peer for one connection to the accelerator stack."""
+
+    def __init__(self, client_ip: int, server_ip: int, sport: int = 4000,
+                 dport: int = 80, iss: int = 5000, window: int = 65535):
+        self.client_ip, self.server_ip = client_ip, server_ip
+        self.sport, self.dport = sport, dport
+        self.iss = iss
+        self.snd_nxt = (iss + 1) & M32
+        self.rcv_nxt: Optional[int] = None
+        self.established = False
+        self.window = window
+        self.received = bytearray()
+        self.ooo = {}                        # seq -> payload (OOO buffer)
+        self.dup_acks_sent = 0
+        self.advance_ticks: List[int] = []   # tick of every rcv_nxt advance
+
+    # ---- frame builders --------------------------------------------------
+    def _frame(self, flags: int, payload: bytes = b"") -> bytes:
+        return F.tcp_eth_frame(self.client_ip, self.server_ip, self.sport,
+                               self.dport, seq=self.snd_nxt,
+                               ack=self.rcv_nxt or 0, flags=flags,
+                               payload=payload, window=self.window)
+
+    def syn_frame(self) -> bytes:
+        """Active open (the engine is passive-open only, §4.4)."""
+        return F.tcp_eth_frame(self.client_ip, self.server_ip, self.sport,
+                               self.dport, seq=self.iss, ack=0,
+                               flags=tcp.SYN, window=self.window)
+
+    def keepalive(self, now: int, every: int = 16) -> List[bytes]:
+        """Handshake retransmission (a real client's SYN / ACK timers):
+        re-send the SYN until the SYN-ACK arrives, and re-send the final
+        handshake ACK until the first data segment proves the server left
+        SYN_RCVD — either frame can be lost on the emulated path."""
+        if now == 0 or now % every:
+            return []
+        if not self.established:
+            return [self.syn_frame()]
+        if not self.received:
+            return [self._frame(tcp.ACK)]
+        return []
+
+    # ---- RX --------------------------------------------------------------
+    def on_frame(self, frame: bytes, now: int) -> List[bytes]:
+        """Process one server frame; returns the ACKs to send back."""
+        f = parse_tcp_frame(frame)
+        if f["proto"] != 6 or f["dst_port"] != self.sport:
+            return []
+        if (f["flags"] & tcp.SYN) and (f["flags"] & tcp.ACK):
+            if self.established:
+                # late duplicate SYN-ACK (delayed/reordered copy): just
+                # re-ack — rewinding rcv_nxt would wedge the transfer
+                return [self._frame(tcp.ACK)]
+            self.rcv_nxt = (f["seq"] + 1) & M32
+            self.established = True
+            return [self._frame(tcp.ACK)]
+        if not self.established:
+            return []
+        data = f["payload"]
+        ece = tcp.ECE if f["ecn"] == 3 else 0
+        if not data:
+            return []                        # pure ACK from the server
+        off = _delta(self.rcv_nxt, f["seq"])
+        if 0 <= off < len(data):
+            # in-order (off == 0) or go-back-N tail overlap (off > 0)
+            self.received.extend(data[off:])
+            self.rcv_nxt = (self.rcv_nxt + len(data) - off) & M32
+            # drain any buffered out-of-order data this made contiguous
+            # (a Linux receiver buffers OOO segments; only the paper's
+            # server engine drops them)
+            while self.rcv_nxt in self.ooo:
+                seg = self.ooo.pop(self.rcv_nxt)
+                self.received.extend(seg)
+                self.rcv_nxt = (self.rcv_nxt + len(seg)) & M32
+            self.advance_ticks.append(now)
+        elif off < 0:
+            # hole: buffer the future segment, dup ACK at rcv_nxt
+            self.ooo.setdefault(f["seq"], data)
+            self.dup_acks_sent += 1
+        # cumulative ACK either way (duplicate when nothing advanced)
+        return [self._frame(tcp.ACK | ece)]

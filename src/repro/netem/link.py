@@ -1,0 +1,145 @@
+"""Deterministic, seedable link emulator.
+
+One :class:`Link` is one direction of a path.  Time is an integer tick
+(the same clock the TCP engine's RTO runs on).  Every impairment draws
+from one seeded ``numpy`` generator in send order, so a (seed, schedule)
+pair replays bit-identically — the property tests rely on this.
+
+Model, applied per frame at ``send``:
+
+  1. loss — i.i.d. with probability ``loss``, and/or a two-state
+     Gilbert–Elliott chain (:class:`GilbertElliott`) for burst loss; the
+     effective drop probability is the larger of the two.
+  2. shaping — with ``rate`` (bytes/tick) set, frames serialize one after
+     another; bytes waiting to depart form the queue.  A frame that would
+     overflow ``queue_bytes`` is tail-dropped; a frame enqueued while the
+     queue is at or above ``ecn_threshold`` gets its IP ECN field set to
+     CE (checksum re-fixed) — the DCTCP-style marking signal.
+  3. delay — fixed one-way ``delay`` plus uniform ``jitter``; with
+     probability ``reorder`` a frame is additionally held ``reorder_extra``
+     ticks (the classic netem reordering knob).
+
+``deliver(now)`` returns every frame whose arrival tick has passed, in
+(arrival, send-order) order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import struct
+from typing import List, Optional
+
+import numpy as np
+
+from repro.net.bytesops import np_checksum16
+from repro.net.frames import l2_offset
+
+
+@dataclasses.dataclass
+class GilbertElliott:
+    """Two-state burst-loss chain: good <-> bad with the given transition
+    probabilities and per-state loss rates."""
+    p_good_bad: float = 0.01
+    p_bad_good: float = 0.3
+    loss_good: float = 0.0
+    loss_bad: float = 1.0
+
+
+@dataclasses.dataclass
+class LinkConfig:
+    delay: int = 1                   # one-way delay, ticks
+    jitter: int = 0                  # + uniform[0, jitter] ticks
+    loss: float = 0.0                # i.i.d. drop probability
+    gilbert: Optional[GilbertElliott] = None
+    reorder: float = 0.0             # P(frame held reorder_extra ticks)
+    reorder_extra: int = 3
+    rate: Optional[int] = None       # bytes/tick; None = unshaped
+    queue_bytes: int = 1 << 16       # shaping queue bound (tail drop)
+    ecn_threshold: Optional[int] = None   # queue bytes; CE-mark above
+    seed: int = 0
+
+
+def _ce_mark(frame: bytes) -> bytes:
+    """Set the IP ECN field to CE (11) and re-fix the header checksum.
+    Handles Ethernet- and IP-level frames (`frames.l2_offset`)."""
+    off = l2_offset(frame)
+    b = bytearray(frame)
+    b[off + 1] |= 0x03
+    b[off + 10:off + 12] = b"\x00\x00"
+    csum = np_checksum16(bytes(b[off:off + 20]))
+    struct.pack_into("!H", b, off + 10, csum)
+    return bytes(b)
+
+
+class Link:
+    """One direction of an emulated path.  See module docstring."""
+
+    def __init__(self, cfg: LinkConfig):
+        if cfg.ecn_threshold is not None and cfg.rate is None:
+            raise ValueError("ecn_threshold needs rate shaping (the mark "
+                             "signal is queue occupancy)")
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self._heap: List = []          # (arrival_tick, send_order, frame)
+        self._seq = 0
+        self._busy_until = 0           # shaping: tick the wire frees up
+        self._queue: List = []         # (depart_tick, nbytes)
+        self._bad = False              # Gilbert–Elliott state
+        self.stats = {"sent": 0, "delivered": 0, "dropped_loss": 0,
+                      "dropped_queue": 0, "marked": 0}
+
+    # ---- internals -------------------------------------------------------
+    def _queued_bytes(self, now: int) -> int:
+        self._queue = [(t, n) for (t, n) in self._queue if t > now]
+        return sum(n for _, n in self._queue)
+
+    def _drop(self) -> bool:
+        cfg = self.cfg
+        p = cfg.loss
+        if cfg.gilbert is not None:
+            g = cfg.gilbert
+            flip = self.rng.random()
+            if self._bad:
+                self._bad = flip >= g.p_bad_good
+            else:
+                self._bad = flip < g.p_good_bad
+            p = max(p, g.loss_bad if self._bad else g.loss_good)
+        return p > 0 and self.rng.random() < p
+
+    # ---- interface -------------------------------------------------------
+    def send(self, frame: bytes, now: int) -> None:
+        cfg = self.cfg
+        self.stats["sent"] += 1
+        if self._drop():
+            self.stats["dropped_loss"] += 1
+            return
+        depart = now
+        if cfg.rate is not None:
+            depth = self._queued_bytes(now)
+            if depth + len(frame) > cfg.queue_bytes:
+                self.stats["dropped_queue"] += 1
+                return
+            if cfg.ecn_threshold is not None and depth >= cfg.ecn_threshold:
+                frame = _ce_mark(frame)
+                self.stats["marked"] += 1
+            tx = max(1, -(-len(frame) // cfg.rate))     # ceil serialization
+            depart = max(now, self._busy_until) + tx
+            self._busy_until = depart
+            self._queue.append((depart, len(frame)))
+        arrival = depart + cfg.delay
+        if cfg.jitter:
+            arrival += int(self.rng.integers(0, cfg.jitter + 1))
+        if cfg.reorder and self.rng.random() < cfg.reorder:
+            arrival += cfg.reorder_extra
+        heapq.heappush(self._heap, (arrival, self._seq, frame))
+        self._seq += 1
+
+    def deliver(self, now: int) -> List[bytes]:
+        out = []
+        while self._heap and self._heap[0][0] <= now:
+            out.append(heapq.heappop(self._heap)[2])
+        self.stats["delivered"] += len(out)
+        return out
+
+    def pending(self) -> int:
+        return len(self._heap)

@@ -1,0 +1,21 @@
+"""Loss-tolerant transport subsystem.
+
+The paper's TCP engine ships without congestion control (§4.4, a stated
+prototype limitation).  This package supplies the missing pieces as the
+same kind of state the engine already uses — fixed-shape per-connection
+arrays, inspectable by the management plane and serializable for live
+migration:
+
+  * :mod:`repro.transport.cc` — congestion-control engine: SRTT/RTTVAR
+    estimation with adaptive RTO + exponential backoff, NewReno
+    slow-start / congestion-avoidance / fast-recovery, and a DCTCP-style
+    ECN policy (per-window alpha), selected per stack by a *tile
+    parameter*, never by forking the engine.
+  * :mod:`repro.transport.rate` — per-port token-bucket rate limiting
+    applied at the UDP dispatch tile, settable in-band via the
+    management plane's ``RATE_SET`` command.
+
+The deterministic network-emulation harness that exercises all of this
+under loss / delay / reordering lives in :mod:`repro.netem`.
+"""
+from repro.transport import cc, rate  # noqa: F401

@@ -1,0 +1,249 @@
+"""Congestion-control engine for the TCP connection table.
+
+State is fixed-shape per-connection arrays nested under ``conn["cc"]`` —
+the same representation the engine uses for everything else, so a
+connection's CC state migrates with it (``tcp.serialize_conn``) and the
+management plane can inspect or rewrite any field.  The policy is a
+scalar, selected by a topology *tile parameter* (``cc_policy`` on the
+``tcp_rx`` tile); when no policy is configured the engine carries no CC
+state at all and behaves bit-identically to the paper's prototype.
+
+Implemented:
+
+  * RTT estimation (RFC 6298 integer arithmetic: ``srtt`` scaled by 8,
+    ``rttvar`` by 4, one outstanding sample, Karn's rule on
+    retransmission) driving an adaptive per-connection RTO with
+    exponential backoff on timer expiry.
+  * NewReno (RFC 5681/6582): slow start, congestion avoidance, fast
+    recovery entered on the 3rd dup-ACK with ``recover = snd_max``,
+    partial ACKs keep retransmitting, full ACKs deflate to ``ssthresh``.
+  * DCTCP-style ECN (RFC 8257 shape): per-window mark fraction smoothed
+    into ``alpha`` (g = 1/16, alpha scaled by 2^10), one
+    ``cwnd -= cwnd * alpha / 2`` cut per marked window.  Under the
+    classic policy an ECE echo instead halves cwnd once per window
+    (RFC 3168).
+
+Time is the engine's tick counter (``tcp.tick`` advances ``cc["now"]``),
+mirroring the paper's cycle-count telemetry timestamps.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import telemetry
+
+I32 = jnp.int32
+U32 = jnp.uint32
+
+NEWRENO, DCTCP = 0, 1
+POLICIES = {"newreno": NEWRENO, "dctcp": DCTCP}
+POLICY_NAMES = {v: k for k, v in POLICIES.items()}
+
+IW_SEGS = 10            # initial window (RFC 6928)
+CWND_MAX = 1 << 20      # keeps the alpha fixed-point products in int32
+RTO_INIT = 8            # ticks (matches the seed engine's fixed timeout)
+RTO_MIN, RTO_MAX = 2, 64
+ALPHA_SHIFT = 10        # alpha fixed point: 1.0 == 1 << 10
+ALPHA_G_SHIFT = 4       # DCTCP g = 1/16
+
+# per-connection arrays, in serialization order (migration blob layout)
+PER_CONN = ("cwnd", "ssthresh", "srtt", "rttvar", "rto", "in_rec",
+            "recover", "rtt_seq", "rtt_ts", "rtt_pending", "ecn_end",
+            "ecn_acked", "ecn_marked", "alpha", "ece_cut",
+            "retx_fast", "retx_timer", "marks")
+
+
+def _seq_lt(a, b):
+    """Wrap-safe sequence-space a < b on uint32."""
+    return ((a.astype(U32) - b.astype(U32)) >> 31) != 0
+
+
+def init(max_conns: int, mss: int = 1460, policy="newreno"):
+    pol = POLICIES[policy] if isinstance(policy, str) else int(policy)
+    C = max_conns
+    z = lambda: jnp.zeros((C,), I32)
+    zu = lambda: jnp.zeros((C,), U32)
+    return {
+        "cwnd": jnp.full((C,), IW_SEGS * mss, I32),
+        "ssthresh": jnp.full((C,), CWND_MAX, I32),
+        "srtt": z(), "rttvar": z(),
+        "rto": jnp.full((C,), RTO_INIT, I32),
+        "in_rec": z(), "recover": zu(),
+        "rtt_seq": zu(), "rtt_ts": z(), "rtt_pending": z(),
+        "ecn_end": zu(), "ecn_acked": z(), "ecn_marked": z(),
+        "alpha": z(), "ece_cut": z(),
+        "retx_fast": z(), "retx_timer": z(), "marks": z(),
+        "policy": jnp.asarray(pol, I32),
+        "mss": jnp.asarray(mss, I32),
+        "now": jnp.asarray(0, I32),
+    }
+
+
+def effective_wnd(cc, i, snd_wnd):
+    """Send window = min(cwnd, peer window), in bytes (int32)."""
+    return jnp.minimum(snd_wnd.astype(I32), cc["cwnd"][i])
+
+
+def on_ack(cc, i, *, est, advanced, acked, fast_retx, ece, ack_seq,
+           high_seq, flight):
+    """Scalar per-connection ACK hook (called from ``tcp.rx_one``).
+
+    est/advanced/fast_retx must already carry the engine's
+    packet-to-connection predicate (`act`) so masked batch rows never
+    touch slot ``i``.  Returns ``(cc', exit_recovery, partial_ack)`` —
+    the engine resets ``dup_acks`` on recovery exit and treats a partial
+    ACK like another fast-retransmit trigger (NewReno).
+    """
+    cc = dict(cc)
+    mss = cc["mss"]
+    g = lambda k: cc[k][i]
+
+    def setw(k, cond, val):
+        cc[k] = cc[k].at[i].set(jnp.where(cond, val.astype(cc[k].dtype),
+                                          cc[k][i]))
+
+    # ---- RTT sample (Karn: one outstanding stamped segment) -------------
+    covered = advanced & (g("rtt_pending") != 0) & \
+        ~_seq_lt(ack_seq, g("rtt_seq"))
+    rtt = jnp.maximum(cc["now"] - g("rtt_ts"), 1)
+    first = g("srtt") == 0
+    err = rtt - (g("srtt") >> 3)
+    srtt_n = jnp.where(first, rtt << 3, g("srtt") + err)
+    rttvar_n = jnp.where(first, rtt << 1,
+                         g("rttvar") + (jnp.abs(err) - (g("rttvar") >> 2)))
+    rto_n = jnp.clip((srtt_n >> 3) + jnp.maximum(rttvar_n, 1),
+                     RTO_MIN, RTO_MAX)
+    setw("srtt", covered, srtt_n)
+    setw("rttvar", covered, rttvar_n)
+    setw("rto", covered, rto_n)
+    # the sample is consumed when covered — and invalidated on fast
+    # retransmit (Karn: an ACK after a retransmission is ambiguous)
+    setw("rtt_pending", covered | fast_retx, jnp.zeros((), I32))
+
+    cwnd = g("cwnd")
+    ssth = g("ssthresh")
+    in_rec = g("in_rec") != 0
+
+    ece_now = est & ece
+    is_dctcp = cc["policy"] == DCTCP
+
+    # ---- window growth (slow start / congestion avoidance) --------------
+    # a classic-policy ECE ack is a congestion signal, not a growth event
+    grow = est & advanced & ~in_rec & ~(ece_now & ~is_dctcp)
+    inc = jnp.where(cwnd < ssth, jnp.minimum(acked.astype(I32), mss),
+                    jnp.maximum((mss * mss) // jnp.maximum(cwnd, 1), 1))
+    cwnd = jnp.where(grow, jnp.minimum(cwnd + inc, CWND_MAX), cwnd)
+
+    # ---- ECN bookkeeping -------------------------------------------------
+    boundary = est & advanced & ~_seq_lt(ack_seq, g("ecn_end"))
+    acked_n = g("ecn_acked") + (est & advanced).astype(I32)
+    marked_n = g("ecn_marked") + (ece_now & advanced).astype(I32)
+    frac = (marked_n << ALPHA_SHIFT) // jnp.maximum(acked_n, 1)
+    alpha_n = g("alpha") + ((frac - g("alpha")) >> ALPHA_G_SHIFT)
+    dctcp_cut = boundary & is_dctcp & (marked_n > 0)
+    cwnd = jnp.where(
+        dctcp_cut,
+        jnp.maximum(cwnd - ((cwnd * alpha_n) >> (ALPHA_SHIFT + 1)), mss),
+        cwnd)
+    setw("alpha", boundary & is_dctcp, alpha_n)
+    setw("ecn_acked", est, jnp.where(boundary, 0, acked_n))
+    setw("ecn_marked", est, jnp.where(boundary, 0, marked_n))
+    setw("ecn_end", boundary, high_seq)
+    # classic policy: one multiplicative ECE cut per window (RFC 3168)
+    nr_cut = ece_now & ~is_dctcp & (g("ece_cut") == 0) & ~in_rec
+    ssth = jnp.where(nr_cut, jnp.maximum(cwnd // 2, 2 * mss), ssth)
+    cwnd = jnp.where(nr_cut, ssth, cwnd)
+    setw("ece_cut", est,
+         jnp.where(boundary & ~nr_cut, 0,
+                   jnp.where(nr_cut, 1, g("ece_cut"))))
+    setw("marks", ece_now, g("marks") + 1)
+
+    # ---- fast recovery (NewReno) ----------------------------------------
+    enter = fast_retx & ~in_rec
+    ssth = jnp.where(enter, jnp.maximum(flight.astype(I32) // 2, 2 * mss),
+                     ssth)
+    cwnd = jnp.where(enter, ssth + 3 * mss, cwnd)
+    setw("recover", enter, high_seq)
+    setw("retx_fast", fast_retx, g("retx_fast") + 1)
+
+    full = advanced & in_rec & ~_seq_lt(ack_seq, g("recover"))
+    partial = advanced & in_rec & _seq_lt(ack_seq, g("recover"))
+    cwnd = jnp.where(full, ssth, cwnd)
+    in_rec_n = jnp.where(enter, 1, jnp.where(full, 0, in_rec.astype(I32)))
+
+    touched = est | fast_retx
+    setw("in_rec", touched, in_rec_n)
+    setw("cwnd", touched, cwnd)
+    setw("ssthresh", touched, ssth)
+    return cc, full, partial
+
+
+def stamp_rtt(cc, i, end_seq, sending):
+    """Arm one RTT sample for new data ending at ``end_seq`` (tx_emit)."""
+    cc = dict(cc)
+    do = sending & (cc["rtt_pending"][i] == 0)
+    cc["rtt_seq"] = cc["rtt_seq"].at[i].set(
+        jnp.where(do, end_seq.astype(U32), cc["rtt_seq"][i]))
+    cc["rtt_ts"] = cc["rtt_ts"].at[i].set(
+        jnp.where(do, cc["now"], cc["rtt_ts"][i]))
+    cc["rtt_pending"] = cc["rtt_pending"].at[i].set(
+        jnp.where(do, 1, cc["rtt_pending"][i]))
+    return cc
+
+
+def on_timer(cc, expired, flight):
+    """Vectorized RTO expiry: multiplicative backoff, cwnd collapse to one
+    MSS, recovery abandoned, pending RTT sample invalidated (Karn)."""
+    cc = dict(cc)
+    mss = cc["mss"]
+    cc["ssthresh"] = jnp.where(
+        expired, jnp.maximum(flight.astype(I32) // 2, 2 * mss),
+        cc["ssthresh"])
+    cc["cwnd"] = jnp.where(expired, mss, cc["cwnd"])
+    cc["rto"] = jnp.where(expired, jnp.minimum(cc["rto"] * 2, RTO_MAX),
+                          cc["rto"])
+    cc["in_rec"] = jnp.where(expired, 0, cc["in_rec"])
+    cc["rtt_pending"] = jnp.where(expired, 0, cc["rtt_pending"])
+    cc["retx_timer"] = cc["retx_timer"] + expired.astype(I32)
+    return cc
+
+
+def tick_clock(cc):
+    cc = dict(cc)
+    cc["now"] = cc["now"] + 1
+    return cc
+
+
+# ---------------------------------------------------------------------------
+# telemetry: one RingLog row per connection per batch
+
+
+def log_name(conn_idx: int) -> str:
+    return f"tcp_cc.{conn_idx}"
+
+
+def log_rows(cc, step):
+    """(C, LOG_WIDTH) counter rows, one per connection.  The LOG_READ-
+    visible prefix is [step, cwnd, ssthresh, srtt_ticks, retx<<16|marks];
+    the tail words carry in_rec, alpha, policy for full-log dumps."""
+    C = cc["cwnd"].shape[0]
+    retx = jnp.minimum(cc["retx_fast"] + cc["retx_timer"], 0xFFFF)
+    marks = jnp.minimum(cc["marks"], 0xFFFF)
+    cols = [
+        jnp.full((C,), telemetry.timestamp(step), I32),
+        cc["cwnd"],
+        jnp.minimum(cc["ssthresh"], 0x7FFFFFFF).astype(I32),
+        cc["srtt"] >> 3,
+        (retx << 16) | marks,
+        cc["in_rec"],
+        cc["alpha"],
+        jnp.full((C,), cc["policy"], I32),
+    ]
+    return jnp.stack(cols, axis=1)
+
+
+def unpack_row(row):
+    """Decode a LOG_READ-served cc row prefix into named counters."""
+    return {"step": int(row[0]), "cwnd": int(row[1]),
+            "ssthresh": int(row[2]), "srtt": int(row[3]),
+            "retx": int(row[4]) >> 16, "marks": int(row[4]) & 0xFFFF}

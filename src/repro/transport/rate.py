@@ -1,0 +1,63 @@
+"""Per-port token-bucket rate limiting, applied at the dispatch tile.
+
+A small fixed-capacity table (same shape discipline as the routing CAMs:
+runtime arrays, rewritable by the control plane) maps an L4 destination
+port to a token bucket.  ``apply`` runs once per batch inside the
+``udp_rx`` tile: buckets refill by ``rate`` tokens (packets) per batch up
+to ``burst``, and packets beyond a port's available tokens are dropped in
+arrival order — the drop shows up in the tile's telemetry counters like
+any other parse failure.  Ports with no entry are unlimited.
+
+The management plane's ``RATE_SET`` command writes slots live (and
+``MgmtConsole.set_rate`` / ``clear_rate`` drive it in-band); a cleared
+slot has port -1 and matches nothing.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+I32 = jnp.int32
+
+SLOTS = 8
+
+
+def init(slots: int = SLOTS):
+    return {
+        "ports": jnp.full((slots,), -1, I32),
+        "rate": jnp.zeros((slots,), I32),     # tokens (packets) per batch
+        "burst": jnp.zeros((slots,), I32),    # bucket capacity
+        "tokens": jnp.zeros((slots,), I32),
+    }
+
+
+def set_slot(rt, slot, port, rate, burst=None):
+    """Install (or rewrite) one bucket; the bucket starts full."""
+    burst = rate if burst is None else burst
+    rt = dict(rt)
+    rt["ports"] = rt["ports"].at[slot].set(jnp.asarray(port, I32))
+    rt["rate"] = rt["rate"].at[slot].set(jnp.asarray(rate, I32))
+    rt["burst"] = rt["burst"].at[slot].set(jnp.asarray(burst, I32))
+    rt["tokens"] = rt["tokens"].at[slot].set(jnp.asarray(burst, I32))
+    return rt
+
+
+def clear_slot(rt, slot):
+    return set_slot(rt, slot, -1, 0, 0)
+
+
+def apply(rt, dst_port, arrived):
+    """One batch step.  dst_port: (B,) uint/int, arrived: (B,) bool.
+    Returns (rt', ok) — ok[b] False means packet b exceeded its port's
+    bucket and must be dropped."""
+    tokens = jnp.minimum(rt["tokens"] + rt["rate"], rt["burst"])
+    port = dst_port.astype(I32)
+    live = rt["ports"] >= 0
+    match = (port[:, None] == rt["ports"][None, :]) & live[None, :] \
+        & arrived[:, None]                                   # (B, S)
+    cum = jnp.cumsum(match.astype(I32), axis=0)              # arrival order
+    allowed = cum <= tokens[None, :]
+    ok = (~match | allowed).all(axis=1)
+    consumed = jnp.minimum(match.sum(axis=0), tokens)
+    rt = dict(rt)
+    rt["tokens"] = tokens - consumed
+    return rt, ok

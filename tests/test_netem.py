@@ -1,0 +1,289 @@
+"""Network emulation: the deterministic link, and the compiled TCP stack
+driven through it under loss / delay / reordering / ECN marking.
+
+The harness tests are the acceptance story for the loss-tolerant
+transport: the stack has to converge to full in-order delivery under any
+impairment schedule, NewReno vs DCTCP vs the seed engine must be
+selectable by topology alone with bit-identical lossless behavior, and a
+random-schedule property (hypothesis, with the deterministic fallback)
+pins convergence in bounded steps."""
+import struct
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.net import eth, frames as F, ipv4, rpc, tcp
+from repro.net.stack import TcpStack, UdpStack
+from repro.netem import (GilbertElliott, Link, LinkConfig, LinuxTcpClient,
+                         StackEndpoint, run_transfer)
+from repro.netem.link import _ce_mark
+from tests._hyp_compat import given, settings, st
+
+IP_C = F.ip("10.0.0.2")
+IP_S = F.ip("10.0.0.1")
+MSS = 256
+PAYLOAD = bytes(np.random.default_rng(7).integers(0, 256, 4000,
+                                                  dtype=np.uint8))
+
+
+# ---------------------------------------------------------------------------
+# the link emulator alone (pure numpy, no stack)
+
+
+def test_link_fixed_delay_preserves_order():
+    link = Link(LinkConfig(delay=3))
+    for i in range(4):
+        link.send(bytes([i]), now=i)
+    assert link.deliver(2) == []
+    assert link.deliver(3) == [b"\x00"]
+    assert link.deliver(10) == [b"\x01", b"\x02", b"\x03"]
+
+
+def test_link_deterministic_replay():
+    cfg = LinkConfig(delay=2, jitter=3, loss=0.3, reorder=0.3, seed=17)
+    out = []
+    for _ in range(2):
+        link = Link(cfg)
+        for i in range(200):
+            link.send(bytes([i % 256]), now=i)
+        out.append((link.deliver(10_000), dict(link.stats)))
+    assert out[0] == out[1]
+    assert out[0][1]["dropped_loss"] > 0
+
+
+def test_link_reorder_swaps_frames():
+    link = Link(LinkConfig(delay=1, reorder=1.0, reorder_extra=5, seed=0))
+    link.send(b"a", now=0)
+    link2 = Link(LinkConfig(delay=1, seed=0))
+    link2.send(b"b", now=0)
+    # the reordered frame arrives reorder_extra ticks later
+    assert link.deliver(1) == [] and link.deliver(6) == [b"a"]
+    assert link2.deliver(1) == [b"b"]
+
+
+def test_gilbert_elliott_produces_bursts():
+    cfg = LinkConfig(delay=1, gilbert=GilbertElliott(
+        p_good_bad=0.2, p_bad_good=0.3, loss_bad=1.0), seed=5)
+    link = Link(cfg)
+    n = 400
+    for i in range(n):
+        link.send(b"x", now=i)
+    lost = n - len(link.deliver(10_000))
+    assert 0 < lost < n
+    # burstiness: loss rate well above an i.i.d. chain with the same
+    # per-frame entry probability would give isolated drops; the chain's
+    # stationary bad fraction is p_gb/(p_gb+p_bg) = 0.4
+    assert abs(lost / n - 0.4) < 0.15
+
+
+def test_shaping_queue_drop_and_ecn_mark():
+    frame = F.udp_rpc_frame(IP_C, IP_S, 5000, 7, b"payload-bytes")
+    cfg = LinkConfig(delay=1, rate=16, queue_bytes=3 * len(frame),
+                     ecn_threshold=len(frame))
+    link = Link(cfg)
+    for _ in range(5):
+        link.send(frame, now=0)
+    assert link.stats["dropped_queue"] == 2        # bounded queue
+    assert link.stats["marked"] == 2               # above-threshold CE
+    got = link.deliver(10_000)
+    assert len(got) == 3
+    # marked frames still parse with a valid IP checksum and ECN == CE
+    marked = [f for f in got if f[15] & 0x3 == 3]
+    assert len(marked) == 2
+    p, l = F.to_batch(marked, 128)
+    p, l, m = eth.parse(jnp.asarray(p), jnp.asarray(l))
+    _, _, m2, ok = ipv4.parse(p, l)
+    assert bool(ok[0]) and int(m2["ip_ecn"][0]) == 3
+
+
+def test_ce_mark_handles_ip_level_frames():
+    pkt = F.ipv4_packet(IP_S, IP_C, 6, b"\x00" * 20)
+    marked = _ce_mark(pkt)
+    p, l = F.to_batch([marked], 64)
+    _, _, m, ok = ipv4.parse(jnp.asarray(p), jnp.asarray(l))
+    assert bool(ok[0]) and int(m["ip_ecn"][0]) == 3
+
+
+# ---------------------------------------------------------------------------
+# stack-through-netem transfers (shared endpoints: compile once)
+
+
+def _endpoint(policy):
+    stack = TcpStack(IP_S, max_conns=4, cc_policy=policy,
+                     options={"tcp_tx_buf": 16384, "mss": MSS})
+    return StackEndpoint(stack, mss=MSS, rx_width=96)
+
+
+_CACHE = {}
+
+
+def _newreno():
+    """One compiled NewReno endpoint shared across tests (the property
+    test can't take pytest fixtures under the hypothesis fallback)."""
+    if "nr" not in _CACHE:
+        _CACHE["nr"] = _endpoint("newreno")
+    return _CACHE["nr"]
+
+
+@pytest.fixture(scope="module")
+def newreno():
+    return _newreno()
+
+
+class TapLink(Link):
+    """Link that records every frame offered to it (pre-impairment)."""
+
+    def __init__(self, cfg):
+        super().__init__(cfg)
+        self.tap = []
+
+    def send(self, frame, now):
+        self.tap.append((now, frame))
+        super().send(frame, now)
+
+
+def _run(srv, cfg_s2c, cfg_c2s=None, payload=PAYLOAD, max_ticks=3000):
+    srv.reset()
+    client = LinuxTcpClient(IP_C, IP_S)
+    l_cs = Link(cfg_c2s or LinkConfig(delay=2, seed=1))
+    l_sc = Link(cfg_s2c)
+    return run_transfer(srv, client, l_cs, l_sc, payload,
+                        max_ticks=max_ticks), client
+
+
+def test_client_ignores_late_duplicate_synack():
+    """A delayed duplicate SYN-ACK (jitter past the keepalive SYN retry)
+    must not rewind an established client's receive point."""
+    client = LinuxTcpClient(IP_C, IP_S)
+    synack = F.tcp_eth_frame(IP_S, IP_C, 80, client.sport, seq=7000,
+                             ack=client.iss + 1, flags=tcp.SYN | tcp.ACK)
+    client.on_frame(synack, 1)
+    data = F.tcp_eth_frame(IP_S, IP_C, 80, client.sport, seq=7001,
+                           ack=client.iss + 1, flags=tcp.ACK | tcp.PSH,
+                           payload=b"hello")
+    client.on_frame(data, 2)
+    assert bytes(client.received) == b"hello"
+    client.on_frame(synack, 3)                     # late duplicate copy
+    assert client.rcv_nxt == 7006                  # not rewound
+    more = F.tcp_eth_frame(IP_S, IP_C, 80, client.sport, seq=7006,
+                           ack=client.iss + 1, flags=tcp.ACK | tcp.PSH,
+                           payload=b" world")
+    client.on_frame(more, 4)
+    assert bytes(client.received) == b"hello world"
+
+
+def test_lossless_transfer_completes(newreno):
+    stats, client = _run(newreno, LinkConfig(delay=2, seed=2))
+    assert stats.complete
+    assert bytes(client.received) == PAYLOAD
+    assert stats.link_stats["s2c"]["dropped_loss"] == 0
+
+
+def test_loss_recovers_with_retransmission(newreno):
+    stats, _ = _run(newreno, LinkConfig(delay=2, loss=0.05, seed=5))
+    assert stats.complete
+    assert stats.link_stats["s2c"]["dropped_loss"] > 0   # loss did happen
+    cc = newreno.state["conn"]["cc"]
+    assert int(cc["retx_fast"][0]) + int(cc["retx_timer"][0]) > 0
+
+
+def test_heavy_loss_and_reordering_converge(newreno):
+    stats, _ = _run(newreno, LinkConfig(
+        delay=2, jitter=2, loss=0.1, reorder=0.2, seed=4), max_ticks=6000)
+    assert stats.complete
+
+
+def test_burst_loss_converges(newreno):
+    stats, _ = _run(newreno, LinkConfig(
+        delay=2, gilbert=GilbertElliott(0.05, 0.4), seed=9),
+        max_ticks=6000)
+    assert stats.complete
+
+
+def test_dctcp_reacts_to_ecn_marks():
+    srv = _endpoint("dctcp")
+    stats, _ = _run(srv, LinkConfig(delay=1, rate=128, queue_bytes=4096,
+                                    ecn_threshold=512, seed=5),
+                    max_ticks=6000)
+    assert stats.complete
+    assert stats.link_stats["s2c"]["marked"] > 0
+    cc = srv.state["conn"]["cc"]
+    assert int(cc["marks"][0]) > 0
+    assert int(cc["alpha"][0]) > 0                 # mark fraction learned
+
+
+def test_lossless_behavior_bit_identical_across_policies(newreno):
+    """Acceptance: NewReno vs DCTCP selectable purely by topology/tile
+    parameter, with every emitted frame bit-identical to the seed engine
+    on a lossless path."""
+    taps = {}
+    payload = PAYLOAD[:2000]
+    for policy in (None, "newreno", "dctcp"):
+        srv = newreno if policy == "newreno" else _endpoint(policy)
+        srv.reset()
+        client = LinuxTcpClient(IP_C, IP_S)
+        l_cs = Link(LinkConfig(delay=2, seed=0))
+        l_sc = TapLink(LinkConfig(delay=2, seed=0))
+        stats = run_transfer(srv, client, l_cs, l_sc, payload,
+                             max_ticks=500)
+        assert stats.complete
+        taps[policy] = l_sc.tap
+    assert taps["newreno"] == taps[None]
+    assert taps["dctcp"] == taps[None]
+
+
+def test_udp_stack_composes_with_netem():
+    """The emulator is stack-agnostic: a compiled UDP echo stack behind a
+    lossy link serves a retrying client fixture."""
+    import jax
+
+    from repro.apps import echo
+    stack = UdpStack([echo.make(port=7)], IP_S)
+    state = stack.init_state()
+    rx_tx = jax.jit(lambda s, p, l: stack.rx_tx(s, p, l))
+    link_up = Link(LinkConfig(delay=1, loss=0.4, seed=8))
+    link_dn = Link(LinkConfig(delay=1, loss=0.4, seed=9))
+    req = F.udp_rpc_frame(IP_C, IP_S, 5000, 7,
+                          rpc.np_frame(rpc.MSG_ECHO, 1, b"retry-me"))
+    got = None
+    for t in range(0, 400, 4):                     # client retry loop
+        link_up.send(req, t)
+        for fr in link_up.deliver(t + 1):
+            p, l = F.to_batch([fr], 128)
+            state, q, ql, alive, info = rx_tx(
+                state, jnp.asarray(p), jnp.asarray(l))
+            if bool(alive[0]):
+                link_dn.send(bytes(np.asarray(q)[0, :int(ql[0])].tobytes()),
+                             t + 1)
+        for fr in link_dn.deliver(t + 2):
+            got = fr
+        if got:
+            break
+    assert got is not None and got.endswith(b"retry-me")
+
+
+# ---------------------------------------------------------------------------
+# satellite: random-schedule convergence property
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.tuples(st.integers(0, 2 ** 16), st.integers(0, 12),
+                 st.integers(0, 20), st.integers(1, 4), st.integers(0, 3),
+                 st.integers(500, 3500)))
+def test_random_schedule_always_converges(params):
+    """Any seeded loss/reorder/delay schedule converges to full in-order
+    delivery with the client's rcv_nxt == the server's snd_nxt, within a
+    bounded tick budget (no permanent stalls)."""
+    seed, loss_pct, reorder_pct, delay, jitter, size = params
+    srv = _newreno()
+    payload = PAYLOAD[:size]
+    cfg = dict(delay=delay, jitter=jitter, loss=loss_pct / 100,
+               reorder=reorder_pct / 100)
+    stats, client = _run(
+        srv, LinkConfig(seed=seed, **cfg),
+        cfg_c2s=LinkConfig(seed=seed + 1, **cfg),
+        payload=payload, max_ticks=6000)
+    assert stats.complete, (params, stats)
+    assert bytes(client.received) == payload
+    assert client.rcv_nxt == srv.snd_nxt()         # full in-order delivery

@@ -1,0 +1,409 @@
+"""Loss-tolerant transport: the congestion-control engine
+(repro/transport/cc), dispatch token buckets (repro/transport/rate), and
+the management-plane hooks that expose both in-band.
+
+The engine tests are frame-driven (golden Linux wire format in, engine
+state + reply segments out) — the CC block is exercised through exactly
+the hooks the compiled stack uses."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import echo
+from repro.core import control, telemetry
+from repro.mgmt.console import MgmtConsole
+from repro.net import eth, frames as F, ipv4, rpc, tcp
+from repro.net.stack import TcpStack, UdpStack, tcp_topology
+from repro.transport import cc as ccmod, rate as rate_mod
+
+IP_C = F.ip("10.0.0.2")
+IP_S = F.ip("10.0.0.1")
+MP = 9909
+MSS = 100
+
+
+def rx(conn, frames, max_len=600):
+    p, l = F.to_batch(frames, max_len)
+    p, l = jnp.asarray(p), jnp.asarray(l)
+    p, l, m = eth.parse(p, l)
+    p, l, m2, ok = ipv4.parse(p, l)
+    m.update(m2)
+    d, dl, m = tcp.parse_segment(p, l, m)
+    return tcp.rx_batch(conn, d, dl, m)
+
+
+def establish(policy="newreno", seq0=5000):
+    conn = tcp.init(max_conns=4, local_ip=IP_S, cc_policy=policy, mss=MSS)
+    syn = F.tcp_eth_frame(IP_C, IP_S, 4000, 80, seq=seq0, ack=0,
+                          flags=tcp.SYN)
+    conn, r = rx(conn, [syn])
+    iss = int(r["tcp_seq"][0])
+    ack = F.tcp_eth_frame(IP_C, IP_S, 4000, 80, seq=seq0 + 1, ack=iss + 1,
+                          flags=tcp.ACK)
+    conn, _ = rx(conn, [ack])
+    return conn, iss
+
+
+def ack_frame(iss, acked, flags=tcp.ACK, seq=5001):
+    return F.tcp_eth_frame(IP_C, IP_S, 4000, 80, seq=seq,
+                           ack=(iss + 1 + acked) & 0xFFFFFFFF, flags=flags)
+
+
+def stage_and_emit(conn, nbytes, nsegs):
+    conn, ok = tcp.app_send(conn, 0,
+                            jnp.asarray([65] * nbytes, jnp.uint8), nbytes)
+    assert bool(ok)
+    for _ in range(nsegs):
+        conn, seg, _, dlen = tcp.tx_emit(conn, 0, mss=MSS)
+    return conn
+
+
+# ---------------------------------------------------------------------------
+# congestion window dynamics
+
+
+def test_cc_initial_window_and_slow_start():
+    conn, iss = establish()
+    cc = conn["cc"]
+    assert int(cc["cwnd"][0]) == ccmod.IW_SEGS * MSS
+    conn = stage_and_emit(conn, 900, 9)
+    # cumulative ACKs grow cwnd by min(acked, mss) in slow start
+    for k in range(3):
+        conn, _ = rx(conn, [ack_frame(iss, 300 * (k + 1))])
+    assert int(conn["cc"]["cwnd"][0]) == ccmod.IW_SEGS * MSS + 3 * MSS
+    assert int(conn["snd_una"][0]) == (iss + 901) & 0xFFFFFFFF
+
+
+def test_cc_congestion_avoidance_after_ssthresh():
+    conn, iss = establish()
+    cc = dict(conn["cc"])
+    cc["ssthresh"] = cc["ssthresh"].at[0].set(MSS)      # force CA regime
+    conn = dict(conn)
+    conn["cc"] = cc
+    cwnd0 = int(cc["cwnd"][0])
+    conn = stage_and_emit(conn, 300, 3)
+    conn, _ = rx(conn, [ack_frame(iss, 300)])
+    # CA growth: + mss*mss/cwnd (rounded down, >= 1), not + mss
+    assert int(conn["cc"]["cwnd"][0]) == cwnd0 + max(MSS * MSS // cwnd0, 1)
+
+
+def test_cc_rtt_estimator_drives_rto():
+    conn, iss = establish()
+    conn = stage_and_emit(conn, 200, 2)
+    for _ in range(4):                  # 4 ticks of one-way-ish delay
+        conn, _ = tcp.tick(conn)
+    conn, _ = rx(conn, [ack_frame(iss, 200)])
+    cc = conn["cc"]
+    assert int(cc["srtt"][0]) >> 3 == 4
+    # RTO = SRTT + max(4*RTTVAR, 1 tick), floored/capped
+    assert ccmod.RTO_MIN <= int(cc["rto"][0]) <= ccmod.RTO_MAX
+    assert int(cc["rto"][0]) == 4 + 8   # rttvar = rtt/2 on first sample
+    assert int(cc["rtt_pending"][0]) == 0
+
+
+def test_cc_fast_recovery_entry_exit_and_dup_ack_reset():
+    conn, iss = establish()
+    conn = stage_and_emit(conn, 500, 5)
+    dup = ack_frame(iss, 0)
+    conn, r = rx(conn, [dup, dup, dup])
+    assert bool(r["fast_retx"][2])
+    cc = conn["cc"]
+    assert int(cc["in_rec"][0]) == 1
+    assert int(cc["ssthresh"][0]) == max(500 // 2, 2 * MSS)
+    assert int(cc["cwnd"][0]) == int(cc["ssthresh"][0]) + 3 * MSS
+    assert int(cc["retx_fast"][0]) == 1
+    # partial ACK: stays in recovery, asks for another retransmit
+    conn, r = rx(conn, [ack_frame(iss, 200)])
+    assert bool(r["fast_retx"][0]) and int(conn["cc"]["in_rec"][0]) == 1
+    # full ACK: exits, deflates to ssthresh, dup-ACK counter resets
+    conn, r = rx(conn, [ack_frame(iss, 500)])
+    assert int(conn["cc"]["in_rec"][0]) == 0
+    assert int(conn["cc"]["cwnd"][0]) == int(conn["cc"]["ssthresh"][0])
+    assert int(conn["dup_acks"][0]) == 0
+
+
+def test_cc_timer_expiry_collapses_window_and_backs_off():
+    conn, iss = establish()
+    conn = stage_and_emit(conn, 200, 2)
+    rto0 = int(conn["cc"]["rto"][0])
+    for _ in range(rto0):
+        conn, expired = tcp.tick(conn)
+    assert bool(expired[0])
+    cc = conn["cc"]
+    assert int(cc["cwnd"][0]) == MSS
+    assert int(cc["rto"][0]) == min(rto0 * 2, ccmod.RTO_MAX)
+    assert int(cc["retx_timer"][0]) == 1
+    assert int(conn["snd_nxt"][0]) == int(conn["snd_una"][0])  # go-back-N
+
+
+def test_tx_emit_fast_vs_timer_retransmit_paths():
+    """Satellite: the two retransmit paths are distinct — fast resends one
+    MSS and leaves snd_nxt alone; timer restarts go-back-N."""
+    conn, iss = establish(policy=None)
+    conn = stage_and_emit(conn, 300, 3)
+    nxt0 = int(conn["snd_nxt"][0])
+    conn, seg, data, dlen = tcp.tx_emit(conn, 0, mss=MSS, retransmit="fast")
+    assert int(seg["tcp_seq"]) == (iss + 1) & 0xFFFFFFFF
+    assert int(dlen) == MSS
+    assert int(conn["snd_nxt"][0]) == nxt0          # untouched
+    conn, seg, data, dlen = tcp.tx_emit(conn, 0, mss=MSS, retransmit="timer")
+    assert int(seg["tcp_seq"]) == (iss + 1) & 0xFFFFFFFF
+    # go-back-N restart: transmission resumes right after this segment
+    assert int(conn["snd_nxt"][0]) == (iss + 1 + MSS) & 0xFFFFFFFF
+    # retransmit=True keeps its old (fast) meaning
+    conn, seg, _, _ = tcp.tx_emit(conn, 0, mss=MSS, retransmit=True)
+    assert int(seg["tcp_seq"]) == (iss + 1) & 0xFFFFFFFF
+
+
+def test_cwnd_gates_tx_emit():
+    conn, iss = establish()
+    cc = dict(conn["cc"])
+    cc["cwnd"] = cc["cwnd"].at[0].set(150)
+    conn = dict(conn)
+    conn["cc"] = cc
+    conn, _ = tcp.app_send(conn, 0, jnp.asarray([65] * 400, jnp.uint8), 400)
+    conn, seg, _, dlen = tcp.tx_emit(conn, 0, mss=MSS)
+    assert int(dlen) == MSS
+    conn, seg, _, dlen = tcp.tx_emit(conn, 0, mss=MSS)
+    assert int(dlen) == 50                          # cwnd-limited
+    conn, seg, _, dlen = tcp.tx_emit(conn, 0, mss=MSS)
+    assert int(dlen) == 0
+
+
+# ---------------------------------------------------------------------------
+# ECN
+
+
+def test_ece_newreno_cuts_once_per_window():
+    conn, iss = establish()
+    conn = stage_and_emit(conn, 600, 6)
+    cwnd0 = int(conn["cc"]["cwnd"][0])
+    conn, _ = rx(conn, [ack_frame(iss, 100, flags=tcp.ACK | tcp.ECE)])
+    cc = conn["cc"]
+    assert int(cc["marks"][0]) == 1
+    assert int(cc["cwnd"][0]) == max(cwnd0 // 2, 2 * MSS)
+    # second ECE in the same window: no further cut
+    cut = int(cc["cwnd"][0])
+    conn, _ = rx(conn, [ack_frame(iss, 200, flags=tcp.ACK | tcp.ECE)])
+    assert int(conn["cc"]["cwnd"][0]) >= cut        # only additive growth
+
+
+def test_ece_dctcp_alpha_tracks_mark_fraction():
+    conn, iss = establish(policy="dctcp")
+    conn = stage_and_emit(conn, 600, 6)
+    # a fully-marked window pushes alpha up by F/16 per boundary
+    acked = 0
+    for k in range(6):
+        acked += 100
+        conn, _ = rx(conn, [ack_frame(iss, acked,
+                                      flags=tcp.ACK | tcp.ECE)])
+    cc = conn["cc"]
+    assert int(cc["marks"][0]) == 6
+    assert int(cc["alpha"][0]) > 0
+    assert int(cc["cwnd"][0]) < ccmod.IW_SEGS * MSS + 6 * MSS  # got cut
+
+
+def test_receiver_echoes_ce_mark_as_ece():
+    conn, iss = establish()
+    seg = F.tcp_eth_frame(IP_C, IP_S, 4000, 80, seq=5001, ack=iss + 1,
+                          flags=tcp.ACK | tcp.PSH, payload=b"marked")
+    # set CE in the IP header (offset 14+1) and re-fix the checksum
+    from repro.netem.link import _ce_mark
+    conn, r = rx(conn, [_ce_mark(seg)])
+    assert bool(r["emit"][0])
+    assert int(r["tcp_flags"][0]) & tcp.ECE
+    # unmarked data is acked without ECE
+    seg2 = F.tcp_eth_frame(IP_C, IP_S, 4000, 80, seq=5007, ack=iss + 1,
+                           flags=tcp.ACK | tcp.PSH, payload=b"clean!")
+    conn, r = rx(conn, [seg2])
+    assert not (int(r["tcp_flags"][0]) & tcp.ECE)
+
+
+# ---------------------------------------------------------------------------
+# migration + tile parameter
+
+
+def test_cc_state_migrates_with_connection():
+    conn, iss = establish()
+    cc = dict(conn["cc"])
+    cc["cwnd"] = cc["cwnd"].at[0].set(777)
+    cc["srtt"] = cc["srtt"].at[0].set(40)
+    conn = dict(conn)
+    conn["cc"] = cc
+    blob = tcp.serialize_conn(conn, 0)
+    target = tcp.init(max_conns=4, local_ip=IP_S, cc_policy="newreno",
+                      mss=MSS)
+    target = tcp.install_conn(target, 2, blob)
+    assert int(target["cc"]["cwnd"][2]) == 777
+    assert int(target["cc"]["srtt"][2]) == 40
+
+
+def test_cc_policy_is_a_tile_parameter():
+    """NewReno vs DCTCP vs the bare seed engine differ only in the
+    topology (a TileDecl param on tcp_rx) — and the param survives the
+    config (de)serialization round trip."""
+    topo = tcp_topology(cc_policy="dctcp")
+    assert topo.tile("tcp_rx").params == {"cc_policy": "dctcp"}
+    topo2 = topo.from_dict(topo.to_dict())
+    assert topo2.tile("tcp_rx").params == {"cc_policy": "dctcp"}
+
+    stack = TcpStack(IP_S, topo=topo2, max_conns=4)
+    st = stack.init_state()
+    assert int(st["conn"]["cc"]["policy"]) == ccmod.DCTCP
+    assert ccmod.log_name(0) in st["telemetry"]["logs"]
+    # no param -> the seed engine, with no CC state anywhere
+    bare = TcpStack(IP_S, max_conns=4)
+    assert "cc" not in bare.init_state()["conn"]
+
+
+# ---------------------------------------------------------------------------
+# token-bucket rate limiting (satellite)
+
+
+def test_rate_bucket_refill_and_burst():
+    rt = rate_mod.init()
+    rt = rate_mod.set_slot(rt, 0, 7, rate=2, burst=4)
+    port = jnp.full((6,), 7, jnp.uint32)
+    arrived = jnp.ones((6,), bool)
+    rt, ok = rate_mod.apply(rt, port, arrived)
+    assert np.asarray(ok).tolist() == [True] * 4 + [False, False]
+    # next batch: only the refill (2 tokens) is available
+    rt, ok = rate_mod.apply(rt, port, arrived)
+    assert np.asarray(ok).tolist() == [True] * 2 + [False] * 4
+    # other ports are never limited
+    rt, ok = rate_mod.apply(rt, jnp.full((3,), 9, jnp.uint32),
+                            jnp.ones((3,), bool))
+    assert np.asarray(ok).tolist() == [True] * 3
+
+
+# ---------------------------------------------------------------------------
+# management plane: RATE_SET / LOG_READ_RANGE / CC knobs (satellites)
+
+
+def batch(frames, max_len=256):
+    p, l = F.to_batch(frames, max_len)
+    return jnp.asarray(p), jnp.asarray(l)
+
+
+def echo_frame(sport, req=1):
+    return F.udp_rpc_frame(IP_C, IP_S, sport, 7,
+                           rpc.np_frame(rpc.MSG_ECHO, req, b"x"))
+
+
+@pytest.fixture(scope="module")
+def udp_stack():
+    return UdpStack([echo.make(port=7)], IP_S, mgmt_port=MP)
+
+
+def test_rate_set_limits_port_live_and_clears(udp_stack):
+    stack = udp_stack
+    state = stack.init_state()
+    con = MgmtConsole(stack)
+    state, r = con.set_rate(state, 0, 7, 2)
+    assert r["status"] == 1
+    frames = [echo_frame(5000 + i, i) for i in range(5)]
+    state, _, _, alive, info = stack.rx_tx(state, *batch(frames))
+    assert np.asarray(alive).tolist() == [True, True, False, False, False]
+    # the drops are visible in udp_rx's telemetry counters
+    row = np.asarray(telemetry.entry_at(
+        state["telemetry"]["logs"]["udp_rx"], 0))
+    assert row[2] == 3
+    state, r = con.clear_rate(state, 0)
+    assert r["status"] == 1
+    state, _, _, alive, _ = stack.rx_tx(state, *batch(frames))
+    assert np.asarray(alive).tolist() == [True] * 5
+
+
+def test_rate_set_burst_allows_transient(udp_stack):
+    stack = udp_stack
+    state = stack.init_state()
+    con = MgmtConsole(stack)
+    state, r = con.set_rate(state, 1, 7, 1, burst=3)
+    assert r["status"] == 1
+    frames = [echo_frame(5000 + i, i) for i in range(4)]
+    state, _, _, alive, _ = stack.rx_tx(state, *batch(frames))
+    assert np.asarray(alive).tolist() == [True, True, True, False]
+    state, _, _, alive, _ = stack.rx_tx(state, *batch(frames))
+    assert np.asarray(alive).tolist() == [True, False, False, False]
+
+
+def test_log_read_range_streams_rows(udp_stack):
+    """Satellite: one LOG_READ_RANGE frame returns what would take
+    `count` one-row LOG_READ round trips."""
+    stack = udp_stack
+    state = stack.init_state()
+    con = MgmtConsole(stack)
+    for k in range(5):
+        state, *_ = stack.rx_tx(state, *batch([echo_frame(6000 + k)]))
+    state, r = con.read_log_range(state, "eth_rx", start=1, count=4)
+    assert r["status"] == 4 and len(r["rows"]) == 4
+    want = np.asarray(telemetry.latest(
+        state["telemetry"]["logs"]["eth_rx"], 5))[:4][::-1]
+    got = np.asarray(r["rows"])
+    np.testing.assert_array_equal(got, want[:, :control.ROW_WORDS])
+
+
+def test_log_read_range_respects_req_buf(udp_stack):
+    stack = udp_stack
+    state = stack.init_state()
+    con = MgmtConsole(stack)
+    state, *_ = stack.rx_tx(state, *batch([echo_frame(5000)]))
+    eth_id = con.node_ids["eth_rx"]
+    reads = [(control.OP_LOG_READ_RANGE, 0, eth_id, 0, 2)] * \
+        (telemetry.REQ_BUF + 1)
+    state, resps = con.roundtrip(state, reads)
+    # each range occupies ONE slot; the overflow request is dropped
+    assert [r["status"] for r in resps] == [2] * telemetry.REQ_BUF + [0]
+
+
+@pytest.fixture(scope="module")
+def tcp_cc_stack():
+    return TcpStack(IP_S, mgmt_port=MP, cc_policy="newreno", max_conns=4)
+
+
+def _establish_on_stack(stack, state):
+    syn = F.tcp_eth_frame(IP_C, IP_S, 4000, 80, seq=900, ack=0,
+                          flags=tcp.SYN)
+    state, resps, *_ = stack.rx_mgmt(state, *batch([syn]))
+    iss = int(resps["tcp_seq"][0])
+    ack = F.tcp_eth_frame(IP_C, IP_S, 4000, 80, seq=901, ack=iss + 1,
+                          flags=tcp.ACK)
+    state, *_ = stack.rx_mgmt(state, *batch([ack]))
+    return state, iss
+
+
+def test_cc_counters_readable_in_band(tcp_cc_stack):
+    """Acceptance: cwnd/ssthresh/rtt for a live connection over LOG_READ."""
+    stack = tcp_cc_stack
+    state = stack.init_state()
+    state, iss = _establish_on_stack(stack, state)
+    # cc logging must not orphan the executor's node counters: the tile
+    # logs saw the same 2 batches the engine did
+    assert int(state["telemetry"]["logs"]["tcp_rx"].wr) == 2
+    assert int(np.asarray(telemetry.entry_at(
+        state["telemetry"]["logs"]["tcp_rx"], 0))[1]) == 1   # packets_in
+    con = MgmtConsole(stack)
+    state, r = con.read_cc(state, 0)
+    assert r["status"] == 1
+    assert r["cc"]["cwnd"] == int(state["conn"]["cc"]["cwnd"][0])
+    assert r["cc"]["ssthresh"] == \
+        min(int(state["conn"]["cc"]["ssthresh"][0]), 0x7FFFFFFF)
+    assert r["cc"]["srtt"] == int(state["conn"]["cc"]["srtt"][0]) >> 3
+    assert r["cc"]["retx"] == 0 and r["cc"]["marks"] == 0
+
+
+def test_cc_knobs_settable_in_band(tcp_cc_stack):
+    stack = tcp_cc_stack
+    state = stack.init_state()
+    state, iss = _establish_on_stack(stack, state)
+    con = MgmtConsole(stack)
+    state, rs = con.set_cc_window(state, 0, cwnd=3333, ssthresh=4444)
+    assert [r["status"] for r in rs] == [1, 1]
+    assert int(state["conn"]["cc"]["cwnd"][0]) == 3333
+    assert int(state["conn"]["cc"]["ssthresh"][0]) == 4444
+    state, r = con.set_cc_policy(state, "dctcp")
+    assert r["status"] == 1
+    assert int(state["conn"]["cc"]["policy"]) == ccmod.DCTCP
+    # rejected knob: unknown conn index
+    state, (r,) = con.roundtrip(state, [(control.OP_CC_SET, 99, 1, 1, 0)])
+    assert r["status"] == 0
