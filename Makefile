@@ -11,7 +11,7 @@ PY ?= python
 PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test-fast test bench bench-mgmt bench-tcp-loss
+.PHONY: test-fast test bench bench-mgmt bench-tcp-loss bench-stream
 
 test-fast:
 	$(PY) -m pytest -q -m "not slow"
@@ -31,3 +31,8 @@ bench-mgmt:
 # the netem link at 0.1% / 1% loss (fails on stall or < 20% goodput)
 bench-tcp-loss:
 	$(PY) benchmarks/bench_tcp_loss.py
+
+# streaming-executor gate: streamed UDP echo pps must be >= 3x the
+# per-batch baseline; writes BENCH_stream.json (the perf trajectory)
+bench-stream:
+	$(PY) benchmarks/bench_stream.py

@@ -70,6 +70,21 @@ def run():
             raise RuntimeError(
                 f"1% loss sustains only {rel:.0%} of lossless goodput "
                 f"(gate: >= 20%)")
+
+    # harness RX path: per-batch dispatch loop vs arena-streamed push
+    # (stream=False forces the pre-streaming per-chunk Python loop; same
+    # links/seeds/payload, but the streamed push services a whole burst
+    # before emitting retransmits — recovery work under loss can differ
+    # slightly, so read this as a harness-cost indicator, not a
+    # controlled A/B of the engine)
+    srv_b = StackEndpoint(stack, mss=MSS, rx_width=96, burst=8,
+                          stream=False)
+    _transfer(srv_b, 0.01)                   # jit warmup
+    _, us_b = _transfer(srv_b, 0.01)
+    _, us_s = _transfer(srv, 0.01)
+    out.append(row("tcp_loss_harness_stream", us_s,
+                   f"per_batch={us_b:.0f}us streamed={us_s:.0f}us "
+                   f"speedup={us_b / max(us_s, 1):.2f}x"))
     return out
 
 

@@ -19,14 +19,28 @@ from repro.launch import hlo_walk
 from repro.launch.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
 
 
-def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall microseconds per call (CPU measurement)."""
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+              carry: bool = False) -> float:
+    """Median wall microseconds per call (CPU measurement).
+
+    ``carry=True`` threads the first element of fn's return value back as
+    the new first argument on every call — required when the first
+    argument is donated (``jax.jit(..., donate_argnums=(0,))``): the old
+    state's buffers die with each call, so re-passing them would fault."""
+    args = list(args)
+
+    def call():
+        out = fn(*args)
+        jax.block_until_ready(out)
+        if carry:
+            args[0] = out[0] if isinstance(out, tuple) else out
+
     for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
+        call()
     ts = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
+        call()
         ts.append(time.perf_counter() - t0)
     ts.sort()
     return ts[len(ts) // 2] * 1e6

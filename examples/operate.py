@@ -50,8 +50,11 @@ def main():
     print("\n-- 1. serve on the virtual IP")
     state = traffic(stack, state, VIP)
 
-    print("\n-- 2. telemetry readback (LOG_READ per tile, age=1)")
-    state, counters = dump_counters(stack, state, age=1)
+    # age 0 = the newest *completed* batch (the traffic above): the fused
+    # node append lands at batch egress, so readback serves rows through
+    # the previous batch
+    print("\n-- 2. telemetry readback (LOG_READ per tile, age=0)")
+    state, counters = dump_counters(stack, state, age=0)
     print(f"  {'tile':<12} {'step':>5} {'pkts_in':>8} {'drops':>6} "
           f"{'noc_lat':>8}")
     for tile, row in counters.items():

@@ -47,6 +47,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import deadlock, routing, telemetry
@@ -72,18 +73,26 @@ class TileSpec:
     init: Optional[Callable] = None     # (ctx) -> state-dict contribution
     alive: bool = False                 # RX parse tile: pred & ok feeds the
                                         # chain's "alive" mask
+    rewrites: Tuple[str, ...] = ()      # meta fields this kind re-parses
+                                        # (pruning soundness: see
+                                        # StackCompiler._prune_dead)
 
 
 TILE_REGISTRY: Dict[str, TileSpec] = {}
 
 
 def register_tile(kind: str, init: Optional[Callable] = None,
-                  alive: bool = False):
+                  alive: bool = False, rewrites: Tuple[str, ...] = ()):
     """Decorator binding a tile kind to its jittable tile function.  Pass
     alive=True for RX-side parse tiles whose success gates packet
-    validity (their pred & ok becomes carrier['alive'] downstream)."""
+    validity (their pred & ok becomes carrier['alive'] downstream).
+    `rewrites` names the route-match meta fields the tile (re)writes —
+    a duplicated parse tile (the paper's repeated-header pattern) makes
+    that field runtime-dependent, which disables dead-stage pruning on
+    it."""
     def deco(fn):
-        TILE_REGISTRY[kind] = TileSpec(fn=fn, init=init, alive=alive)
+        TILE_REGISTRY[kind] = TileSpec(fn=fn, init=init, alive=alive,
+                                       rewrites=tuple(rewrites))
         return fn
     return deco
 
@@ -258,6 +267,64 @@ class StackCompiler:
             out[n] = chain_latency_cycles(coords, REF_PAYLOAD_BYTES)
         return out
 
+    # ---- dead-stage pruning ----------------------------------------------
+    # Route keys on ethertype / ip_proto are *structural*: a packet can
+    # only carry one value per header field, so an edge keyed on a value
+    # that contradicts what every upstream path already committed to can
+    # never fire, and a node whose in-edges are all dead is untraceable
+    # garbage — prune it before tracing instead of compiling a stage whose
+    # predicate is constant-false.  Port-keyed routes (udp_port/tcp_port)
+    # are never pruned: those CAMs are the runtime-rewritable surface
+    # (ROUTE_SET), so their reachability is a runtime question.
+    _STATIC_MATCH = ("ethertype", "ip_proto")
+
+    def _prune_dead(self, start: str,
+                    order: Sequence[str]) -> Tuple[List[str], List[str]]:
+        """Constraint propagation over the route DAG: for each node, the
+        set of values each static field can still hold on arriving
+        packets (missing field = unconstrained).  Joins union field-wise
+        (a conservative over-approximation — pruning only when *every*
+        path contradicts).
+
+        Soundness under repeated headers: predicates evaluate the *live*
+        carrier meta, and a duplicated parse tile (e.g. the inner ip_rx
+        behind an IP-in-IP decap, paper §3.5) rewrites its field for the
+        whole batch.  A field rewritten by more than one compiled node is
+        therefore runtime-dependent and exempt from pruning entirely —
+        tile kinds declare what they rewrite via ``register_tile(...,
+        rewrites=...)``."""
+        def join(a, b):
+            return {f: a[f] | b[f] for f in set(a) & set(b)}
+
+        writers: Dict[str, int] = {}
+        for n in order:
+            for f in resolve_kind(self.nodes[n].kind).rewrites:
+                writers[f] = writers.get(f, 0) + 1
+        static = tuple(f for f in self._STATIC_MATCH
+                       if writers.get(f, 0) <= 1)
+
+        names = set(order)
+        feasible: Dict[str, Dict[str, set]] = {start: {}}
+        for n in order:
+            if n == start:
+                continue
+            merged = None
+            for s, d, r in self.edges:
+                if d != n or s not in names or s not in feasible:
+                    continue
+                cs = feasible[s]
+                if r.match in static and r.key is not None:
+                    vals = cs.get(r.match)
+                    if vals is not None and r.key not in vals:
+                        continue               # edge contradicts upstream
+                    cs = dict(cs)
+                    cs[r.match] = {r.key}
+                merged = cs if merged is None else join(merged, cs)
+            if merged is not None:
+                feasible[n] = merged
+        return ([n for n in order if n in feasible],
+                [n for n in order if n not in feasible])
+
     def _is_trunk(self, ingress: str, names, node: str) -> bool:
         """True when every packet path from the ingress passes through
         `node` (route-DAG post-dominance): no sink stays reachable once the
@@ -285,6 +352,8 @@ class StackCompiler:
         start = self._node_of[ingress]
         names = self._reachable(start)
         order = self._topo_order(names)
+        order, pruned = self._prune_dead(start, order)
+        names = list(order)
         lats = self._latency_estimates(start, names)
         index_of = {n: i for i, n in enumerate(order)}
 
@@ -315,24 +384,35 @@ class StackCompiler:
                               binding=binding, options=self.options,
                               lat_cycles=lats[n], index=i, pipe=pipe_meta)
             in_edges = [(s, r) for s, d, r in self.edges
-                        if d == n and s in names]
+                        if d == n and s in index_of]
             trunk = spec.alive and self._is_trunk(start, names, n)
             stages.append((node, spec, ctx, in_edges, trunk))
-        return CompiledPipeline(start, stages, table_entries, pipe_meta)
+        return CompiledPipeline(start, stages, table_entries, pipe_meta,
+                                pruned=pruned)
 
 
 class CompiledPipeline:
-    """One jittable executor: run(state, carrier) -> (state, carrier)."""
+    """One jittable executor: run(state, carrier) -> (state, carrier) per
+    batch, or run_stream(state, payloads, lengths) for N device-resident
+    batches under one lax.scan."""
+
+    # carrier keys worth stacking out of a streamed run (whichever exist)
+    STREAM_OUT_KEYS = ("tx_payload", "tx_len", "alive", "info", "tcp_resps")
 
     def __init__(self, ingress: str, stages, table_entries=None,
-                 pipe_meta=None):
+                 pipe_meta=None, pruned=None):
         self.ingress = ingress
         self.stages = stages
         self.table_entries = table_entries or {}
+        self.pruned = list(pruned or [])
         self.pipe_meta = pipe_meta or {"order": self.order, "groups": [],
                                        "tables": []}
         self._index = {node.name: i
                        for i, (node, *_) in enumerate(self.stages)}
+        # static per-node columns of the fused telemetry row block
+        self._lat_cycles = jnp.asarray(
+            [ctx.lat_cycles for _, _, ctx, *_ in self.stages], jnp.int32)
+        self._node_idx = jnp.arange(len(self.stages), dtype=jnp.int32)
 
     @property
     def order(self) -> List[str]:
@@ -363,8 +443,9 @@ class CompiledPipeline:
         if with_telemetry:
             deep_merge(st, {"telemetry": {
                 "step": jnp.zeros((), jnp.int32),
-                "logs": {node.name: telemetry.make_log(log_entries)
-                         for node, *_ in self.stages},
+                "nodes": telemetry.make_node_log(len(self.stages),
+                                                 log_entries),
+                "logs": {},
             }})
         # logs served together over LOG_READ are stacked: every log must
         # share one ring depth (tile inits contribute extra logs, e.g.
@@ -372,6 +453,8 @@ class CompiledPipeline:
         # here instead of crashing inside the compiled mgmt tile
         logs = st.get("telemetry", {}).get("logs", {})
         depths = {lg.entries.shape[0] for lg in logs.values()}
+        if "nodes" in st.get("telemetry", {}):
+            depths.add(st["telemetry"]["nodes"].entries.shape[0])
         if len(depths) > 1:
             raise ValueError(
                 f"telemetry logs mix ring depths {sorted(depths)}; use "
@@ -380,20 +463,41 @@ class CompiledPipeline:
                 f"are present")
         return st
 
+    # ---- telemetry access ------------------------------------------------
+    def node_log(self, state, name: str) -> telemetry.RingLog:
+        """One node's counter rows out of the stacked node log, as an
+        ordinary RingLog view (for `telemetry.latest` / `entry_at`)."""
+        return telemetry.node_view(state["telemetry"]["nodes"],
+                                   self._index[name])
+
+    def node_logs(self, state) -> Dict[str, telemetry.RingLog]:
+        return {n: self.node_log(state, n) for n in self.order}
+
     # ---- execution -------------------------------------------------------
-    def run(self, state: Dict[str, Any], carrier: Dict[str, Any]):
+    def run(self, state: Dict[str, Any], carrier: Dict[str, Any],
+            with_telemetry: bool = True):
+        """One batch through the chain.  ``telemetry["nodes"]`` (the
+        stacked per-node counter log) is owned by the pipeline whose
+        ``init_state`` created it — a pipeline running against another
+        pipeline's state (e.g. the TCP TX build chain, whose returned
+        state is discarded) must pass ``with_telemetry=False``."""
         state = dict(state)
         carrier = dict(carrier)
         carrier.setdefault("meta", {})
         carrier.setdefault("info", {})
         n = carrier["payload"].shape[0]
 
-        telem = state.get("telemetry")
+        telem = state.get("telemetry") if with_telemetry else None
         if telem is not None:
             telem = {"step": telem["step"] + 1, "logs": dict(telem["logs"])}
+            if "nodes" in state["telemetry"]:
+                telem["nodes"] = state["telemetry"]["nodes"]
             state["telemetry"] = telem
+        count_nodes = telem is not None and "nodes" in telem
 
         routes_rt = state.get("routes")
+        pkts_in: List[jnp.ndarray] = []
+        drops: List[jnp.ndarray] = []
         ok_of: Dict[str, jnp.ndarray] = {}
         for node, spec, ctx, in_edges, trunk in self.stages:
             if not in_edges:                       # ingress / chain root
@@ -424,13 +528,20 @@ class CompiledPipeline:
                     prev = carrier.get("alive", jnp.ones((n,), bool))
                     carrier["alive"] = jnp.where(pred, ok_of[node.name],
                                                  prev)
-            if telem is not None and node.name in telem["logs"]:
-                row = telemetry.counter_row(
-                    telem["step"], pred.sum(dtype=jnp.int32),
-                    (pred & ~ok_of[node.name]).sum(dtype=jnp.int32),
-                    ctx.lat_cycles, ctx.index)
-                telem["logs"][node.name] = telemetry.append(
-                    telem["logs"][node.name], row, jnp.ones((1,), bool))
+            if count_nodes:
+                pkts_in.append(pred.sum(dtype=jnp.int32))
+                drops.append((pred & ~ok_of[node.name]).sum(dtype=jnp.int32))
+
+        # ---- fused telemetry: ONE stacked row write for the whole batch --
+        # (the per-stage masked appends collapsed into a single
+        # (num_nodes, LOG_WIDTH) scatter; readback therefore serves rows
+        # *through the previous batch* — the batch's own row lands when it
+        # completes, like a telemetry DMA at pipeline egress)
+        if count_nodes:
+            rows = telemetry.counter_rows(
+                telem["step"], jnp.stack(pkts_in), jnp.stack(drops),
+                self._lat_cycles, self._node_idx)
+            telem["nodes"] = telemetry.append_stacked(telem["nodes"], rows)
 
         # ---- post-batch table commit (management plane) ------------------
         # A management tile stages table writes in the carrier; they are
@@ -459,6 +570,30 @@ class CompiledPipeline:
                 state["conn"] = conn
         return state, carrier
 
+    # ---- streaming execution (device-resident multi-batch) ---------------
+    def run_stream(self, state: Dict[str, Any], payloads, lengths,
+                   out_keys: Optional[Sequence[str]] = None):
+        """Run N batches device-resident under ONE ``lax.scan``: state is
+        the scan carry, ``payloads`` is a (N, B, L) frame arena with
+        (N, B) ``lengths``, and the selected carrier outputs come back
+        stacked along the leading axis.  One dispatch, zero host syncs in
+        the scanned region, bit-identical to N sequential :meth:`run`
+        calls (telemetry counters and post-batch management commits
+        included — a table staged by batch i is live for batch i+1
+        *inside* the stream).
+
+        Returns ``(state', outs)`` with ``outs[k]`` of shape (N, ...).
+        ``out_keys`` selects which carrier keys to stack (default:
+        whichever of :data:`STREAM_OUT_KEYS` the chain produces)."""
+        keys = self.STREAM_OUT_KEYS if out_keys is None else tuple(out_keys)
+
+        def step(st, xs):
+            p, l = xs
+            st, carrier = self.run(st, {"payload": p, "length": l})
+            return st, {k: carrier[k] for k in keys if k in carrier}
+
+        return jax.lax.scan(step, state, (payloads, lengths))
+
 
 # ---------------------------------------------------------------------------
 # the generic app-group tile function (dispatch + process, paper §4.2/§5)
@@ -469,8 +604,13 @@ def _app_init(ctx: TileContext) -> dict:
     a = ctx.binding
     if a is None:
         raise CompileError(f"app group {ctx.name!r} has no binding")
+    # fresh buffers per init_state: the AppDecl holds its template state
+    # by reference, and aliased arrays across two init_state() calls would
+    # let a donated run (run_stream's stream_fn) delete another state's
+    # buffers out from under it
+    fresh = jax.tree_util.tree_map(lambda x: jnp.array(x), a.state)
     return {"dispatch": {a.name: make_dispatch(list(range(a.n_replicas)))},
-            "apps": {a.name: a.state}}
+            "apps": {a.name: fresh}}
 
 
 @register_tile("app", init=_app_init)

@@ -102,6 +102,54 @@ def counter_row(step, pkts_in, drops, lat_cycles, tile_index) -> jnp.ndarray:
     return row[None, :]
 
 
+# ---- stacked node log: every pipeline node's counters in ONE RingLog ------
+# The executor's per-batch telemetry is a single (num_nodes, LOG_WIDTH) row
+# write into a RingLog whose entries are (depth, num_nodes, LOG_WIDTH) —
+# one scatter per batch for the whole pipeline instead of the masked
+# cumsum/concat/scatter machinery once per stage.  `req_fill` is per node
+# ((num_nodes,)) so LOG_READ backpressure stays per log id.
+
+
+def make_node_log(num_nodes: int,
+                  n_entries: int = PIPE_LOG_ENTRIES) -> RingLog:
+    return RingLog(
+        entries=jnp.zeros((n_entries, num_nodes, LOG_WIDTH), jnp.int32),
+        wr=jnp.zeros((), jnp.int32),
+        req_fill=jnp.zeros((num_nodes,), jnp.int32),
+    )
+
+
+def append_stacked(log: RingLog, rows: jnp.ndarray) -> RingLog:
+    """Append one (num_nodes, LOG_WIDTH) row block — a single scatter."""
+    n = log.entries.shape[0]
+    return dataclasses.replace(
+        log, entries=log.entries.at[log.wr % n].set(rows), wr=log.wr + 1)
+
+
+def counter_rows(step, pkts_in, drops, lat_cycles,
+                 tile_index) -> jnp.ndarray:
+    """The whole pipeline's counter block: (num_nodes, LOG_WIDTH) from
+    per-node (num_nodes,) columns."""
+    n = pkts_in.shape[0]
+    return jnp.stack([
+        jnp.broadcast_to(timestamp(step), (n,)),
+        pkts_in.astype(jnp.int32),
+        drops.astype(jnp.int32),
+        lat_cycles.astype(jnp.int32),
+        tile_index.astype(jnp.int32),
+        jnp.zeros((n,), jnp.int32),
+        jnp.zeros((n,), jnp.int32),
+        jnp.zeros((n,), jnp.int32),
+    ], axis=1)
+
+
+def node_view(log: RingLog, index: int) -> RingLog:
+    """One node's slice of the stacked log as an ordinary RingLog, so
+    `latest` / `entry_at` / host-side readers work unchanged."""
+    return RingLog(entries=log.entries[:, index, :], wr=log.wr,
+                   req_fill=log.req_fill[index])
+
+
 def latest(log: RingLog, n: int = 1) -> jnp.ndarray:
     """The last n entries, oldest first (readback convenience)."""
     cap = log.entries.shape[0]
@@ -109,11 +157,13 @@ def latest(log: RingLog, n: int = 1) -> jnp.ndarray:
     return log.entries[idx]
 
 
-def log_order(pipe_order, log_names):
+def log_order(pipe_order, extra_names):
     """The canonical log-id namespace shared by the management tile and
     the operator console: pipeline nodes (in execution order) first, then
     any extra logs (e.g. the per-connection ``tcp_cc.*`` CC logs) sorted
     by name.  A node's log id therefore equals its node index, keeping
-    LOG_READ ids stable when extra logs appear."""
-    extra = sorted(n for n in log_names if n not in pipe_order)
-    return [n for n in pipe_order if n in log_names] + extra
+    LOG_READ ids stable when extra logs appear.  Node counters live in the
+    stacked node log (`make_node_log`); `extra_names` are the keys of
+    ``telemetry["logs"]`` (tile-contributed per-object RingLogs)."""
+    extra = sorted(n for n in extra_names if n not in pipe_order)
+    return list(pipe_order) + extra

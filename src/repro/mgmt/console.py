@@ -176,10 +176,12 @@ class MgmtConsole:
     # ---- readback --------------------------------------------------------
     def log_ids(self, state) -> Dict[str, int]:
         """The runtime log-id namespace: node logs first (id == node
-        index), then extra logs (per-connection CC logs) — the same order
-        the compiled mgmt tile serves (`telemetry.log_order`)."""
-        logs = state.get("telemetry", {}).get("logs", {})
-        order = telemetry.log_order(list(self.node_ids), logs)
+        index; rows come from the stacked `telemetry["nodes"]` log), then
+        extra logs (per-connection CC logs) — the same order the compiled
+        mgmt tile serves (`telemetry.log_order`)."""
+        telem = state.get("telemetry", {})
+        nodes = list(self.node_ids) if "nodes" in telem else []
+        order = telemetry.log_order(nodes, telem.get("logs", {}))
         return {n: i for i, n in enumerate(order)}
 
     def read_counters(self, state, tile: str, age: int = 0):

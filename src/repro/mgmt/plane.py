@@ -164,13 +164,26 @@ def mgmt_tile(state, carrier, pred, ctx):
 
     telem = state.get("telemetry")
     # canonical log-id namespace (shared with MgmtConsole): pipeline nodes
-    # first, then extra logs — e.g. the per-connection tcp_cc.* CC logs
-    lnames = (telemetry.log_order(pm["order"], telem["logs"])
-              if telem is not None else [])
-    n_logs = len(lnames)
-    ents = (jnp.stack([telem["logs"][n].entries for n in lnames]) if n_logs
+    # first (rows live stacked in telemetry["nodes"] — one slice per node,
+    # written as a single block at batch egress, so LOG_READ serves rows
+    # *through the previous batch*), then extra logs — e.g. the
+    # per-connection tcp_cc.* CC logs, which their tiles append inline
+    nodes = (telem or {}).get("nodes")
+    extras = sorted((telem or {}).get("logs", {}))
+    node_names = list(pm["order"]) if nodes is not None else []
+    n_nodes = len(node_names)
+    n_logs = len(telemetry.log_order(node_names, extras))
+    blocks_e, blocks_w = [], []
+    if nodes is not None:
+        blocks_e.append(jnp.moveaxis(nodes.entries, 0, 1))
+        blocks_w.append(jnp.broadcast_to(nodes.wr, (n_nodes,)))
+    if extras:
+        blocks_e.append(jnp.stack([telem["logs"][n].entries
+                                   for n in extras]))
+        blocks_w.append(jnp.stack([telem["logs"][n].wr for n in extras]))
+    ents = (jnp.concatenate(blocks_e) if blocks_e
             else jnp.zeros((1, 1, telemetry.LOG_WIDTH), jnp.int32))
-    wrs = (jnp.stack([telem["logs"][n].wr for n in lnames]) if n_logs
+    wrs = (jnp.concatenate(blocks_w) if blocks_w
            else jnp.zeros((1,), jnp.int32))
 
     # dispatch-side token buckets + congestion-control knobs (if present)
@@ -335,9 +348,15 @@ def mgmt_tile(state, carrier, pred, ctx):
         version=carry["version"], last_op=carry["last_op"],
         acks=carry["acks"])}
     if telem is not None:
-        for i, nme in enumerate(lnames):
+        if nodes is not None:
+            # in-place into the executor's per-run telemetry dict, like
+            # the tile-contributed logs: the executor appends this
+            # batch's row block to exactly this object after the stages
+            telem["nodes"] = dataclasses.replace(
+                nodes, req_fill=carry["fills"][:n_nodes])
+        for j, nme in enumerate(extras):
             telem["logs"][nme] = dataclasses.replace(
-                telem["logs"][nme], req_fill=carry["fills"][i])
+                telem["logs"][nme], req_fill=carry["fills"][n_nodes + j])
 
     # ---- stage table writes for the executor's post-batch commit ------
     staged = {"healthy": {g: h for g, h in zip(groups, carry["healthy"])}}

@@ -77,15 +77,73 @@ def tcp_eth_frame(src_ip, dst_ip, src_port, dst_port, seq, ack, flags,
     return eth_frame(dst_mac, src_mac, 0x0800, pkt)
 
 
-def to_batch(frames, max_len: int = 512):
-    """Pack a list of byte strings into (B, L) uint8 + lengths."""
+def to_batch(frames, max_len: int = None):
+    """Pack a list of byte strings into (B, L) uint8 + lengths.
+
+    ``max_len=None`` auto-sizes L to the longest frame.  An explicit
+    ``max_len`` smaller than a frame raises a ValueError naming the frame
+    and both sizes (instead of numpy's opaque broadcast error)."""
+    if max_len is None:
+        max_len = max((len(f) for f in frames), default=1)
     B = len(frames)
     payload = np.zeros((B, max_len), np.uint8)
     length = np.zeros((B,), np.int32)
     for i, f in enumerate(frames):
+        if len(f) > max_len:
+            raise ValueError(
+                f"frame {i} is {len(f)} bytes but max_len={max_len}; "
+                f"pass max_len >= {len(f)} or omit it to auto-size")
         payload[i, :len(f)] = np.frombuffer(f, np.uint8)
         length[i] = len(f)
     return payload, length
+
+
+class FrameArena:
+    """Preallocated multi-batch frame store for the streaming executor:
+    ``payload`` is (n_batches, batch, max_len) uint8, ``length`` is
+    (n_batches, batch) int32, both filled **in place** — feeding
+    `CompiledPipeline.run_stream` never allocates per batch the way a
+    per-call :func:`to_batch` does.  Unused rows stay zero-length (they
+    flow through the compiled chain as dead packets: no route matches an
+    all-zero frame)."""
+
+    def __init__(self, n_batches: int, batch: int, max_len: int):
+        self.n_batches = n_batches
+        self.batch = batch
+        self.max_len = max_len
+        self.payload = np.zeros((n_batches, batch, max_len), np.uint8)
+        self.length = np.zeros((n_batches, batch), np.int32)
+
+    @property
+    def capacity(self) -> int:
+        """Total frame slots."""
+        return self.n_batches * self.batch
+
+    def clear(self):
+        """Zero every slot in place (no reallocation)."""
+        self.payload[:] = 0
+        self.length[:] = 0
+
+    def fill(self, frames) -> int:
+        """Pack a flat list of frames row-major (batch 0 fills first);
+        returns the number of batches holding data.  Stale bytes of
+        reused slots are cleared so a shorter refill never leaks the
+        previous frame's tail."""
+        if len(frames) > self.capacity:
+            raise ValueError(
+                f"{len(frames)} frames exceed the arena's capacity "
+                f"{self.capacity} ({self.n_batches} batches x "
+                f"{self.batch} frames)")
+        self.clear()
+        for i, f in enumerate(frames):
+            if len(f) > self.max_len:
+                raise ValueError(
+                    f"frame {i} is {len(f)} bytes but the arena's "
+                    f"max_len is {self.max_len}")
+            b, k = divmod(i, self.batch)
+            self.payload[b, k, :len(f)] = np.frombuffer(f, np.uint8)
+            self.length[b, k] = len(f)
+        return -(-len(frames) // self.batch) if frames else 0
 
 
 def ip(a: str) -> int:

@@ -17,6 +17,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, List, Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.compiler import StackCompiler, deep_merge
@@ -24,6 +25,15 @@ from repro.core.topology import TopologyConfig
 from repro.mgmt import plane as _mgmt_plane    # registers the mgmt tiles
 from repro.net import ipinip, ipv4
 from repro.net import tiles as _tiles          # noqa: F401  (registers kinds)
+
+
+def _cached_stream_fn(stack):
+    """One donated jit of ``stack.run_stream`` per stack instance.
+    Donation invalidates the state argument's buffers — callers must
+    thread the returned state and never reuse the donated one."""
+    if getattr(stack, "_stream_fn", None) is None:
+        stack._stream_fn = jax.jit(stack.run_stream, donate_argnums=(0,))
+    return stack._stream_fn
 
 
 def _bind_or_check_mgmt(topo: TopologyConfig, mgmt_port: int):
@@ -190,6 +200,28 @@ class UdpStack:
         return (state, carrier["tx_payload"], carrier["tx_len"],
                 carrier["alive"], carrier["info"])
 
+    def run_stream(self, state, payloads, lengths):
+        """Streamed rx_tx: N batches (a (N, B, L) frame arena + (N, B)
+        lengths) device-resident under one scan — one dispatch, no host
+        round trips between batches.  Returns (state', outs) with outs
+        holding stacked ``tx_payload`` / ``tx_len`` / ``alive`` / ``info``.
+        Bit-identical to N sequential :meth:`rx_tx` calls."""
+        state, outs = self.pipeline.run_stream(
+            state, payloads, lengths,
+            out_keys=("tx_payload", "tx_len", "alive", "info"))
+        state = dict(state)
+        state["rx_count"] = state["rx_count"] + \
+            outs["alive"].sum(dtype=jnp.int32)
+        return state, outs
+
+    def stream_fn(self):
+        """The jitted streaming entry point with the state carry
+        *donated*: ``state, outs = stack.stream_fn()(state, arena.payload,
+        arena.length)``.  Donation lets XLA reuse the state buffers
+        in place across calls — callers must thread the returned state and
+        never touch the donated argument again."""
+        return _cached_stream_fn(self)
+
 
 # ---------------------------------------------------------------------------
 # TCP stack with optional NAT (live migration)
@@ -296,6 +328,20 @@ class TcpStack:
             state, {"payload": payload, "length": length})
         return state, carrier["tcp_resps"]
 
+    def run_stream(self, state, payloads, lengths):
+        """Streamed RX: N inbound batches through the compiled RX chain
+        under one scan.  Returns (state', outs) where
+        ``outs["tcp_resps"]`` holds the engine's reply-segment field
+        batches stacked (N, B, ...).  Bit-identical to N sequential
+        :meth:`rx` calls."""
+        return self.rx_pipe.run_stream(state, payloads, lengths,
+                                       out_keys=("tcp_resps",))
+
+    def stream_fn(self):
+        """Jitted streamed RX with the state carry donated (see
+        ``UdpStack.stream_fn``)."""
+        return _cached_stream_fn(self)
+
     def rx_mgmt(self, state, payload, length):
         """RX with the management branch: returns (state', tcp_resps,
         mgmt_tx_payload, mgmt_tx_len, mgmt_mask) — rows of the batch that
@@ -314,6 +360,10 @@ class TcpStack:
         dl = dlen.reshape(1) if dlen.ndim == 0 else dlen
         mm = {k: (v.reshape(1) if v.ndim == 0 else v)
               for k, v in seg_meta.items()}
+        # with_telemetry=False: the returned state is discarded (original
+        # API), and the stacked node log in the shared state belongs to
+        # the RX pipeline — the TX chain must not write into it
         _, carrier = self.tx_pipe.run(
-            state, {"payload": payload, "length": dl, "meta": mm})
+            state, {"payload": payload, "length": dl, "meta": mm},
+            with_telemetry=False)
         return carrier["tx_payload"], carrier["tx_len"]

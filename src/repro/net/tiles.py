@@ -27,14 +27,14 @@ from repro.transport import cc as ccmod, rate as rate_mod
 # RX protocol tiles
 
 
-@register_tile("eth_rx", alive=True)
+@register_tile("eth_rx", alive=True, rewrites=("ethertype",))
 def eth_rx(state, carrier, pred, ctx):
     p, l, m = eth.parse(carrier["payload"], carrier["length"])
     carrier.update(payload=p, length=l, meta=m)
     return state, carrier, None
 
 
-@register_tile("ip_rx", alive=True)
+@register_tile("ip_rx", alive=True, rewrites=("ip_proto",))
 def ip_rx(state, carrier, pred, ctx):
     p, l, m2, ok = ipv4.parse(carrier["payload"], carrier["length"])
     m = dict(carrier["meta"])

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.net import tcp
+from repro.net import frames as F, tcp
 from repro.netem.host import LinuxTcpClient
 from repro.netem.link import Link
 
@@ -31,18 +31,29 @@ _META_FIELDS = ("src_ip", "dst_ip", "src_port", "dst_port", "tcp_seq",
 
 
 class StackEndpoint:
-    """Wraps one ``TcpStack`` (server / sender side) for the tick loop."""
+    """Wraps one ``TcpStack`` (server / sender side) for the tick loop.
+
+    Inbound bursts larger than one batch are packed into a preallocated
+    :class:`repro.net.frames.FrameArena` and pushed device-resident
+    through the stack's streamed RX (`TcpStack.run_stream`, donated state
+    carry): one dispatch per ``stream_batches`` batches instead of a
+    Python loop dispatching per batch.  ``stream=False`` forces the
+    per-batch path (the benchmark baseline)."""
 
     def __init__(self, stack, conn: int = 0, mss: int = 512,
-                 batch: int = 4, rx_width: int = 128, burst: int = 4):
+                 batch: int = 4, rx_width: int = 128, burst: int = 4,
+                 stream: bool = True, stream_batches: int = 2):
         self.stack = stack
         self.conn = conn
         self.mss = mss
         self.batch = batch
         self.rx_width = rx_width
         self.burst = burst
+        self.stream = stream
+        self.arena = F.FrameArena(stream_batches, batch, rx_width)
         self.state = stack.init_state()
         self._rx = jax.jit(lambda st, p, l: stack.rx(st, p, l))
+        self._rx_stream = stack.stream_fn()
         self._tx_frame = jax.jit(
             lambda st, m, d, dl: stack.tx_frame(st, m, d, dl))
         self._tick = jax.jit(lambda c: tcp.tick(c))
@@ -82,32 +93,50 @@ class StackEndpoint:
 
     def push(self, frames: List[bytes], now: int) -> List[bytes]:
         """Feed inbound frames through the compiled RX pipeline; returns
-        the stack's reply frames (SYN-ACKs / ACKs / fast retransmits)."""
+        the stack's reply frames (SYN-ACKs / ACKs / fast retransmits).
+
+        Bursts that fit one batch take the per-batch dispatch; larger
+        bursts stream arena chunks device-resident (the RX queue is fully
+        serviced before any reply TX — RX-priority scheduling)."""
         out: List[bytes] = []
-        for i in range(0, len(frames), self.batch):
-            chunk = frames[i:i + self.batch]
-            p = np.zeros((self.batch, self.rx_width), np.uint8)
-            l = np.zeros((self.batch,), np.int32)
-            for k, f in enumerate(chunk):
-                p[k, :len(f)] = np.frombuffer(f, np.uint8)
-                l[k] = len(f)
-            self.state, resps = self._rx(self.state, jnp.asarray(p),
-                                         jnp.asarray(l))
-            emit = np.asarray(resps["emit"])
-            fast = np.asarray(resps["fast_retx"])
-            for r in range(len(chunk)):
-                if emit[r]:
-                    meta = {k: resps[k][r] for k in _META_FIELDS}
-                    out.append(self._build(meta, self._ack_pad,
-                                           jnp.zeros((), jnp.int32)))
-                if fast[r]:
-                    conn, seg, data, dlen = self._emit_fast(
-                        self.state["conn"])
-                    self.state["conn"] = conn
-                    if bool(seg["emit"]):
-                        meta = {k: seg[k] for k in _META_FIELDS}
-                        out.append(self._build(meta, data, dlen))
+        i = 0
+        while i < len(frames):
+            if not self.stream or len(frames) - i <= self.batch:
+                chunk = frames[i:i + self.batch]
+                p = np.zeros((self.batch, self.rx_width), np.uint8)
+                l = np.zeros((self.batch,), np.int32)
+                for k, f in enumerate(chunk):
+                    p[k, :len(f)] = np.frombuffer(f, np.uint8)
+                    l[k] = len(f)
+                self.state, resps = self._rx(self.state, jnp.asarray(p),
+                                             jnp.asarray(l))
+            else:
+                chunk = frames[i:i + self.arena.capacity]
+                self.arena.fill(chunk)
+                self.state, outs = self._rx_stream(
+                    self.state, jnp.asarray(self.arena.payload),
+                    jnp.asarray(self.arena.length))
+                resps = {k: v.reshape((-1,) + v.shape[2:])
+                         for k, v in outs["tcp_resps"].items()}
+            self._emit_replies(resps, len(chunk), out)
+            i += len(chunk)
         return out
+
+    def _emit_replies(self, resps, n: int, out: List[bytes]):
+        emit = np.asarray(resps["emit"])
+        fast = np.asarray(resps["fast_retx"])
+        for r in range(n):
+            if emit[r]:
+                meta = {k: resps[k][r] for k in _META_FIELDS}
+                out.append(self._build(meta, self._ack_pad,
+                                       jnp.zeros((), jnp.int32)))
+            if fast[r]:
+                conn, seg, data, dlen = self._emit_fast(
+                    self.state["conn"])
+                self.state["conn"] = conn
+                if bool(seg["emit"]):
+                    meta = {k: seg[k] for k in _META_FIELDS}
+                    out.append(self._build(meta, data, dlen))
 
     def poll(self, now: int) -> List[bytes]:
         """One engine tick: retransmit timer, then emit new segments up to

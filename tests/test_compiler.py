@@ -375,7 +375,7 @@ def test_per_tile_telemetry_counters():
     payload, length = F.to_batch(frames, 256)
     payload, length = jnp.asarray(payload), jnp.asarray(length)
     state, *_ = jax.jit(stack.rx_tx)(state, payload, length)
-    logs = state["telemetry"]["logs"]
+    logs = stack.pipeline.node_logs(state)
     assert set(logs) == set(stack.pipeline.order)
     row_eth = np.asarray(telemetry.latest(logs["eth_rx"])[0])
     row_ip = np.asarray(telemetry.latest(logs["ip_rx"])[0])

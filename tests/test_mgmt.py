@@ -101,14 +101,16 @@ def test_log_read_returns_real_counter_row():
 
     con = MgmtConsole(stack)
     echo_idx = con.node_ids["echo"]
-    state, r = con.read_counters(state, "echo", age=1)   # age 0 = the
-    assert r["status"] == 1                              # readback batch
+    # the fused node append lands at batch egress, so age 0 is the newest
+    # *completed* batch — the data batch above, not the readback batch
+    state, r = con.read_counters(state, "echo", age=0)
+    assert r["status"] == 1
     row = r["row"]
     assert row["step"] == 1 and row["packets_in"] == 3 and row["drops"] == 0
     assert row["noc_latency"] > 0 and row["tile_index"] == echo_idx
     # and the row matches the RingLog the executor keeps
     want = np.asarray(telemetry.entry_at(
-        state["telemetry"]["logs"]["echo"], 1))
+        stack.pipeline.node_log(state, "echo"), 1))
     assert [row["step"], row["packets_in"], row["drops"],
             row["noc_latency"], row["tile_index"]] == want[:5].tolist()
 
@@ -122,7 +124,7 @@ def test_log_read_beyond_req_buf_is_dropped_then_served_on_retry():
     state, resps = con.roundtrip(state, reads)
     assert [r["status"] for r in resps] == [1] * telemetry.REQ_BUF + [0, 0]
     # dropped requests left the version untouched and the fill visible
-    assert int(state["telemetry"]["logs"]["eth_rx"].req_fill) == \
+    assert int(stack.pipeline.node_log(state, "eth_rx").req_fill) == \
         telemetry.REQ_BUF
     # clients re-request; the buffer drained between batches
     state, resps = con.roundtrip(state, reads[:1])
@@ -265,9 +267,11 @@ def test_tcp_stack_console_roundtrip():
     stack = TcpStack(IP_S, mgmt_port=MP)
     state = stack.init_state()
     con = MgmtConsole(stack)
+    state, _ = con.version(state)       # one completed batch writes rows
     state, r = con.read_counters(state, "tcp_rx", age=0)
     assert r["status"] == 1
     assert r["row"]["tile_index"] == con.node_ids["tcp_rx"]
+    assert r["row"]["step"] == 1        # the VERSION batch, not the read
 
 
 # ---------------------------------------------------------------------------
@@ -344,6 +348,7 @@ def test_dump_counters_covers_every_tile():
     state, *_ = stack.rx_tx(state, *batch([echo_frame(IP_S, 5000)]))
     state, counters = dump_counters(stack, state)
     assert set(counters) == set(stack.pipeline.order)
-    # the dump batch itself is what age-0 rows describe: every ingress
-    # tile saw exactly the LOG_READ frames
-    assert counters["eth_rx"]["packets_in"] == len(stack.pipeline.order)
+    # age-0 rows describe the newest *completed* batch (the fused node
+    # append lands at batch egress): the single echo frame above, not the
+    # dump batch itself
+    assert counters["eth_rx"]["packets_in"] == 1

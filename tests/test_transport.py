@@ -306,7 +306,7 @@ def test_rate_set_limits_port_live_and_clears(udp_stack):
     assert np.asarray(alive).tolist() == [True, True, False, False, False]
     # the drops are visible in udp_rx's telemetry counters
     row = np.asarray(telemetry.entry_at(
-        state["telemetry"]["logs"]["udp_rx"], 0))
+        stack.pipeline.node_log(state, "udp_rx"), 0))
     assert row[2] == 3
     state, r = con.clear_rate(state, 0)
     assert r["status"] == 1
@@ -335,10 +335,12 @@ def test_log_read_range_streams_rows(udp_stack):
     con = MgmtConsole(stack)
     for k in range(5):
         state, *_ = stack.rx_tx(state, *batch([echo_frame(6000 + k)]))
-    state, r = con.read_log_range(state, "eth_rx", start=1, count=4)
+    # readback serves rows through the *previous* batch (the fused node
+    # append lands at batch egress), so start=0 is the newest data batch
+    state, r = con.read_log_range(state, "eth_rx", start=0, count=4)
     assert r["status"] == 4 and len(r["rows"]) == 4
     want = np.asarray(telemetry.latest(
-        state["telemetry"]["logs"]["eth_rx"], 5))[:4][::-1]
+        stack.pipeline.node_log(state, "eth_rx"), 5))[:4][::-1]
     got = np.asarray(r["rows"])
     np.testing.assert_array_equal(got, want[:, :control.ROW_WORDS])
 
@@ -348,6 +350,7 @@ def test_log_read_range_respects_req_buf(udp_stack):
     state = stack.init_state()
     con = MgmtConsole(stack)
     state, *_ = stack.rx_tx(state, *batch([echo_frame(5000)]))
+    state, *_ = stack.rx_tx(state, *batch([echo_frame(5001)]))
     eth_id = con.node_ids["eth_rx"]
     reads = [(control.OP_LOG_READ_RANGE, 0, eth_id, 0, 2)] * \
         (telemetry.REQ_BUF + 1)
@@ -379,9 +382,9 @@ def test_cc_counters_readable_in_band(tcp_cc_stack):
     state, iss = _establish_on_stack(stack, state)
     # cc logging must not orphan the executor's node counters: the tile
     # logs saw the same 2 batches the engine did
-    assert int(state["telemetry"]["logs"]["tcp_rx"].wr) == 2
+    assert int(stack.rx_pipe.node_log(state, "tcp_rx").wr) == 2
     assert int(np.asarray(telemetry.entry_at(
-        state["telemetry"]["logs"]["tcp_rx"], 0))[1]) == 1   # packets_in
+        stack.rx_pipe.node_log(state, "tcp_rx"), 0))[1]) == 1  # packets_in
     con = MgmtConsole(stack)
     state, r = con.read_cc(state, 0)
     assert r["status"] == 1
