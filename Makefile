@@ -11,7 +11,8 @@ PY ?= python
 PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test-fast test bench bench-mgmt bench-tcp-loss bench-stream
+.PHONY: test-fast test bench bench-mgmt bench-tcp-loss bench-stream \
+        bench-rpc-tail
 
 test-fast:
 	$(PY) -m pytest -q -m "not slow"
@@ -36,3 +37,9 @@ bench-tcp-loss:
 # per-batch baseline; writes BENCH_stream.json (the perf trajectory)
 bench-stream:
 	$(PY) benchmarks/bench_stream.py
+
+# direct-attached serving gate: LM request p99 through the compiled stack
+# (lm_serve tile inside run_stream) must be <= 0.5x the host-mediated
+# baseline; APPENDS a trajectory entry to BENCH_rpc_tail.json
+bench-rpc-tail:
+	$(PY) benchmarks/bench_rpc_tail.py

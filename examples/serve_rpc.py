@@ -61,7 +61,8 @@ def main():
         for i, (s, toks) in enumerate(sessions.items()):
             req = bytes(np.asarray(body[i, :blen[i]]).tobytes())
             reply = engines[h[i]].handle(req)
-            sid, out_toks = decode_reply(reply)
+            sid, out_toks, ok = decode_reply(reply)
+            assert ok
             transcript.setdefault(s, []).extend(out_toks)
         if round_ == 0:
             # live migration: move session 101 to the other engine;

@@ -125,7 +125,8 @@ class TileContext:
 # route-match predicates (the CAM lookup, paper §4.2)
 
 _MATCH_FIELD = {"ethertype": "ethertype", "ip_proto": "ip_proto",
-                "udp_port": "dst_port", "tcp_port": "dst_port"}
+                "udp_port": "dst_port", "tcp_port": "dst_port",
+                "rpc_msg": "msg_type"}
 
 
 def _match_pred(route: RouteEntry, carrier, n):

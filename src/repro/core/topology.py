@@ -24,9 +24,11 @@ from repro.core.noc import Coord, chain_channels, mesh_coords
 
 # route-match spaces a tile can use to pick the next hop (paper §4.2: CAMs
 # keyed on header fields, runtime-rewritable).  "tile" addresses a
-# management-NoC endpoint by its target index (paper §3.6).
-MATCH_SPACES = ("ethertype", "ip_proto", "udp_port", "tcp_port", "flow_hash",
-                "rr", "const", "vip", "tile")
+# management-NoC endpoint by its target index (paper §3.6).  "rpc_msg"
+# dispatches on the RPC frame's msg_type — app tiles are addressed by the
+# request kind, not just the UDP port (the direct-attached serving path).
+MATCH_SPACES = ("ethertype", "ip_proto", "udp_port", "tcp_port", "rpc_msg",
+                "flow_hash", "rr", "const", "vip", "tile")
 
 
 @dataclasses.dataclass

@@ -21,6 +21,7 @@ MSG_VR_PREPARE = 3
 MSG_VR_COMMIT = 4
 MSG_LM_GENERATE = 5
 MSG_CTRL = 6
+MSG_LM_RELEASE = 7
 
 
 def parse(payload, length):

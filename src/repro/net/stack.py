@@ -15,7 +15,7 @@ protocol order is hardcoded here — reroute the topology (e.g. with
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -147,6 +147,43 @@ def udp_topology(apps: List[AppDecl], name="udp-stack") -> TopologyConfig:
         else:
             nm = f"{app.name}.0" if app.n_replicas > 1 else app.name
             topo.add_route("udp_rx", "udp_port", app.port, nm)
+    return topo
+
+
+def rpc_serve_topology(tiles: List[Tuple[str, str, int]],
+                       name: str = "rpc-serve-stack",
+                       params: Optional[dict] = None) -> TopologyConfig:
+    """Direct-attached serving topology: eth -> ip -> udp, then the app
+    tiles dispatched on the RPC frame's ``msg_type`` (the ``rpc_msg``
+    match space) — the request *kind* picks the accelerator tile, on any
+    UDP port.  ``tiles`` is a list of (tile_name, tile_kind, msg_type)
+    triples, e.g.::
+
+        rpc_serve_topology([("lm", "lm_serve", rpc.MSG_LM_GENERATE),
+                            ("rs", "rs_serve", rpc.MSG_RS_ENCODE)])
+
+    Like every keyed route, the msg_type CAM (``udp_rx:rpc_msg``) is a
+    runtime table: the management plane can rebind a message type to
+    another tile live.  ``params`` maps tile_name -> TileDecl params
+    (e.g. {"rs": {"use_pallas": True}})."""
+    params = params or {}
+    topo = TopologyConfig(name, max(4, 3 + len(tiles)), 2)
+    topo.add_tile("eth_rx", "eth_rx", 0, 0)
+    topo.add_tile("ip_rx", "ip_rx", 1, 0)
+    topo.add_tile("udp_rx", "udp_rx", 2, 0)
+    topo.add_tile("eth_tx", "eth_tx", 0, 1)
+    topo.add_tile("ip_tx", "ip_tx", 1, 1)
+    topo.add_tile("udp_tx", "udp_tx", 2, 1)
+    topo.add_route("eth_rx", "ethertype", 0x0800, "ip_rx")
+    topo.add_route("ip_rx", "ip_proto", ipv4.PROTO_UDP, "udp_rx")
+    topo.add_route("udp_tx", "const", None, "ip_tx")
+    topo.add_route("ip_tx", "const", None, "eth_tx")
+    for i, (nm, kind, msg) in enumerate(tiles):
+        topo.add_tile(nm, kind, 3 + i, 0, params=params.get(nm))
+        topo.add_chain("eth_rx", "ip_rx", "udp_rx", nm,
+                       "udp_tx", "ip_tx", "eth_tx")
+        topo.add_route("udp_rx", "rpc_msg", msg, nm)
+        topo.add_route(nm, "const", None, "udp_tx")
     return topo
 
 

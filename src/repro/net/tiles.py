@@ -16,6 +16,7 @@ checksum lives, for NAT's incremental fixup).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import telemetry
@@ -248,4 +249,98 @@ def eth_tx(state, carrier, pred, ctx):
 def controller(state, carrier, pred, ctx):
     """Control-plane tiles live on the ctrl NoC; on the data path they are
     inert (commands arrive via control.controller_apply)."""
+    return state, carrier, None
+
+
+# ---------------------------------------------------------------------------
+# application tiles (direct-attached accelerator compute, paper §5/§6)
+#
+# These are topology-declared like any protocol tile: the serving topology
+# routes udp_rx -> app on `rpc_msg` (the RPC frame's msg_type), so the
+# request *kind* — not just the port — picks the tile, and the CAM entry is
+# runtime-rewritable like every other keyed route.  Both tiles are pure
+# JAX: inside `run_stream` the ingest -> compute -> reply loop runs with
+# zero host syncs, the paper's direct-attached path.
+
+
+def _lm_init(ctx):
+    from repro.core.compiler import CompileError
+    b = ctx.binding
+    if b is None:
+        raise CompileError(f"lm_serve tile {ctx.name!r} has no LmTileDecl "
+                           f"binding")
+    # fresh buffers per init_state (see _app_init: donation safety)
+    fresh = jax.tree_util.tree_map(lambda x: jnp.array(x), b.state)
+    return {"apps": {ctx.name: fresh}}
+
+
+@register_tile("lm_serve", init=_lm_init)
+def lm_serve(state, carrier, pred, ctx):
+    """Direct-attached LM decode: session/KV state lives in the stack
+    state (the run_stream scan carry); each arriving MSG_LM_GENERATE
+    triggers one on-device decode step for its session and the reply body
+    (the generated token) is written in the same device program."""
+    from repro.apps import lm_server
+    apps = dict(state["apps"])
+    st, nb, nl = lm_server.tile_process(ctx.binding, apps[ctx.name],
+                                        carrier["body"], carrier["blen"],
+                                        pred)
+    apps[ctx.name] = st
+    state = dict(state)
+    state["apps"] = apps
+    carrier["out_body"] = jnp.where(pred[:, None], nb, carrier["out_body"])
+    carrier["out_blen"] = jnp.where(pred, nl, carrier["out_blen"])
+    info = dict(carrier["info"])
+    info[ctx.name] = pred
+    carrier["info"] = info
+    return state, carrier, None
+
+
+def _rs_serve_init(ctx):
+    return {"apps": {ctx.name: {
+        "ops": jnp.zeros((), jnp.int32),
+        "bytes": jnp.zeros((), jnp.int32)}}}
+
+
+@register_tile("rs_serve", init=_rs_serve_init)
+def rs_serve(state, carrier, pred, ctx):
+    """Direct-attached RS(8,2) encode (kernels/rs_encode) keyed on
+    MSG_RS_ENCODE: 4 KiB data in, 1 KiB parity out, computed on device.
+    Set ``params={"use_pallas": True}`` on the TileDecl for the Pallas
+    kernel.  Needs the batch payload wide enough for a 4 KiB body; on a
+    narrower arena the tile serves nothing (requests get ERR via blen 0)."""
+    from repro.apps import reed_solomon as RS
+    from repro.kernels.rs_encode import ops as rs_ops
+    body, blen = carrier["body"], carrier["blen"]
+    n = body.shape[0]
+    use_pallas = bool(ctx.members[0].params.get("use_pallas", False))
+    info = dict(carrier["info"])
+    if body.shape[1] < RS.REQ:                 # arena too narrow: no-serve
+        info[ctx.name] = jnp.zeros((n,), bool)
+        carrier["info"] = info
+        carrier["out_blen"] = jnp.where(pred, 0, carrier["out_blen"])
+        return state, carrier, None
+    valid = pred & (blen >= RS.REQ)
+
+    def encode(data):
+        parity = rs_ops.encode_blocks(data, k=RS.K, p=RS.P,
+                                      use_pallas=use_pallas)
+        out = jnp.zeros_like(body)
+        return out.at[:, :RS.RESP].set(parity)
+
+    out = jax.lax.cond(valid.any(), encode,
+                       lambda d: jnp.zeros_like(body), body[:, :RS.REQ])
+    carrier["out_body"] = jnp.where(valid[:, None], out,
+                                    carrier["out_body"])
+    carrier["out_blen"] = jnp.where(valid, RS.RESP,
+                                    jnp.where(pred, 0, carrier["out_blen"]))
+    apps = dict(state["apps"])
+    a = dict(apps[ctx.name])
+    a["ops"] = a["ops"] + valid.sum(dtype=jnp.int32)
+    a["bytes"] = a["bytes"] + jnp.where(valid, RS.REQ, 0).sum(dtype=jnp.int32)
+    apps[ctx.name] = a
+    state = dict(state)
+    state["apps"] = apps
+    info[ctx.name] = valid
+    carrier["info"] = info
     return state, carrier, None

@@ -22,11 +22,15 @@ def parse(payload, length, meta):
                                     pseudo)
     ok = (csum == 0) | (full == 0)         # csum 0 = disabled (RFC 768)
     ok &= udp_len.astype(jnp.int32) <= length
+    # runt header: udp_len < 8 would yield a negative payload length that
+    # poisons every downstream length computation — reject AND clamp
+    ok &= udp_len.astype(jnp.int32) >= UDP_HLEN
     stripped = B.shift_left(payload, UDP_HLEN)
     m = dict(meta)
     m.update({"src_port": src_port, "dst_port": dst_port,
               "udp_len": udp_len})
-    return stripped, udp_len.astype(jnp.int32) - UDP_HLEN, m, ok
+    plen = jnp.maximum(udp_len.astype(jnp.int32) - UDP_HLEN, 0)
+    return stripped, plen, m, ok
 
 
 def build(payload, length, meta, with_checksum: bool = True):

@@ -41,6 +41,18 @@ class ServeEngine:
         self._decode = jax.jit(self._decode_impl)
 
     # ---- session lifecycle -----------------------------------------------
+    def has_free_slot(self) -> bool:
+        return bool((~self.used).any())
+
+    def release(self, sid: int) -> None:
+        """Free slot `sid` (explicit close / LRU eviction).  The cache
+        column is left in place — a freed slot's stale entries are
+        invisible (attention never reads past `pos`, and `pos` is reset on
+        the next install)."""
+        self.used[sid] = False
+        self.pos = self.pos.at[sid].set(0)
+        self.last_tok = self.last_tok.at[sid].set(0)
+
     def new_session(self, prompt_tokens: np.ndarray,
                     extras: Optional[Dict] = None) -> int:
         """Prefill the prompt into a free slot; returns the session id."""

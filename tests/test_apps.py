@@ -181,6 +181,6 @@ def test_lm_rpc_app_roundtrip(small_engine):
     app = LmServerApp(ServeEngine(cfg, params, max_sessions=2, max_seq=32))
     req = encode_request(7, 3, [5, 6, 7])
     reply = app.handle(req)
-    session, toks = decode_reply(reply)
-    assert session == 7 and len(toks) == 3
+    session, toks, ok = decode_reply(reply)
+    assert ok and session == 7 and len(toks) == 3
     assert all(0 <= t < cfg.vocab for t in toks)
