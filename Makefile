@@ -12,7 +12,7 @@ PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
 .PHONY: test-fast test bench bench-mgmt bench-tcp-loss bench-stream \
-        bench-rpc-tail
+        bench-rpc-tail bench-obs
 
 test-fast:
 	$(PY) -m pytest -q -m "not slow"
@@ -43,3 +43,9 @@ bench-stream:
 # baseline; APPENDS a trajectory entry to BENCH_rpc_tail.json
 bench-rpc-tail:
 	$(PY) benchmarks/bench_rpc_tail.py
+
+# observability gate: flight recorder (1/64 sampling) + histograms must
+# stay within 10% of the telemetry-only run_stream baseline, with zero
+# host callbacks in the scanned region; APPENDS to BENCH_obs.json
+bench-obs:
+	$(PY) benchmarks/bench_obs.py

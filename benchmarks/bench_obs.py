@@ -1,0 +1,121 @@
+"""Observability overhead: flight recorder + histograms vs telemetry-only.
+
+The tentpole's cost claim: the device-resident observability layer
+(sampled flight recorder at 1-in-64, drop-reason attribution, latency
+histograms) rides the same `run_stream` scan as the dataplane with no
+host callbacks — so the only acceptable price is a small amount of extra
+on-device arithmetic.  This bench measures it:
+
+  * **baseline** — `UdpStack(..., with_obs=False)`: the full production
+    pipeline with fused per-tile telemetry counters, exactly the
+    pre-observability streamed path.
+  * **obs** — the default stack with the recorder enabled at the
+    production sampling rate (1 in 2**6 frames) and histograms
+    accumulating every frame of every batch.
+
+Both run identical UDP-echo windows through donated `run_stream`
+dispatches.  Appends a trajectory entry to ``BENCH_obs.json`` and gates
+(`make bench-obs` fails otherwise):
+
+  * obs streamed time within 10% of the telemetry-only baseline, and
+  * zero host callbacks/transfers in the obs-enabled scanned region.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (append_trajectory, assert_no_host_callbacks,
+                               row)
+from repro.apps import echo
+from repro.net import frames as F, rpc
+from repro.net.stack import UdpStack
+
+IP_C, IP_S = F.ip("10.0.0.2"), F.ip("10.0.0.1")
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_obs.json")
+OVERHEAD_GATE = 0.10
+
+
+def _enable_recorder(state, shift: int = 6):
+    """Flip the runtime sampling knobs directly in state (what TRACE_SET
+    stages through the management plane — the bench needs no mgmt port)."""
+    obs = dict(state["telemetry"]["obs"])
+    obs["ctrl"] = {"enable": jnp.ones((), jnp.int32),
+                   "shift": jnp.full((), shift, jnp.int32)}
+    state = dict(state)
+    state["telemetry"] = dict(state["telemetry"])
+    state["telemetry"]["obs"] = obs
+    return state
+
+
+def measure(n_batches: int = 64, batch: int = 16, frame_payload: int = 64,
+            repeats: int = 7, shift: int = 6):
+    fr = F.udp_rpc_frame(IP_C, IP_S, 5000, 7,
+                         rpc.np_frame(rpc.MSG_ECHO, 0,
+                                      b"x" * frame_payload))
+    frames = [fr] * batch
+    width = len(fr) + 64
+    arena = F.FrameArena(n_batches, batch, width)
+    arena.fill(frames * n_batches)
+    n_pkts = n_batches * batch
+
+    def timed_window(stack, st, stream):
+        arena.fill(frames * n_batches)
+        t0 = time.perf_counter()
+        st, outs = stream(st, jnp.asarray(arena.payload),
+                          jnp.asarray(arena.length))
+        jax.block_until_ready(outs)
+        return st, time.perf_counter() - t0
+
+    results = {}
+    for name, kwargs, rec in (("baseline", {"with_obs": False}, False),
+                              ("obs", {}, True)):
+        stack = UdpStack([echo.make(port=7)], IP_S, **kwargs)
+        st = stack.init_state()
+        if rec:
+            st = _enable_recorder(st, shift)
+            assert_no_host_callbacks(
+                lambda s, p, l: stack.pipeline.run_stream(
+                    s, p, l, out_keys=("tx_payload", "tx_len", "alive")),
+                st, jnp.asarray(arena.payload), jnp.asarray(arena.length))
+        stream = stack.stream_fn()
+        st, _ = timed_window(stack, st, stream)        # compile + warm
+        ts = []
+        for _ in range(repeats):
+            st, t = timed_window(stack, st, stream)
+            ts.append(t)
+        results[name] = min(ts)
+
+    t_b, t_o = results["baseline"], results["obs"]
+    return {
+        "n_batches": n_batches, "batch": batch, "frame_bytes": len(fr),
+        "sample_shift": shift, "packets_per_window": n_pkts,
+        "baseline_us": t_b * 1e6, "obs_us": t_o * 1e6,
+        "baseline_pps": n_pkts / t_b, "obs_pps": n_pkts / t_o,
+        "overhead": t_o / t_b - 1.0,
+    }
+
+
+def run():
+    r = measure()
+    out = [row("obs_udp_echo_baseline",
+               r["baseline_us"] / r["packets_per_window"],
+               f"cpu={r['baseline_pps']:.0f}pps"),
+           row("obs_udp_echo_recorded",
+               r["obs_us"] / r["packets_per_window"],
+               f"cpu={r['obs_pps']:.0f}pps "
+               f"overhead={100 * r['overhead']:.1f}%")]
+    append_trajectory(OUT_PATH, r)
+    if r["overhead"] > OVERHEAD_GATE:
+        raise RuntimeError(
+            f"observability overhead {100 * r['overhead']:.1f}% exceeds "
+            f"the {100 * OVERHEAD_GATE:.0f}% gate (recorder at "
+            f"1/{2 ** r['sample_shift']} sampling + histograms)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

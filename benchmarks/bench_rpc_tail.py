@@ -26,7 +26,6 @@ tests/test_stream.py).
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -34,7 +33,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import (append_trajectory, assert_no_host_callbacks,
+                               row)
 from repro.apps import lm_server
 from repro.configs.serve_smoke import MAX_SEQ, MAX_SESSIONS, serve_config
 from repro.models import model
@@ -77,26 +77,8 @@ def _assert_no_host_sync(stack, state, p, l):
     """Zero host transfers inside the compiled serve program (the
     acceptance assertion from tests/test_stream.py, applied here so the
     bench itself certifies what it measures)."""
-    closed = jax.make_jaxpr(lambda st, pp, ll: stack.run_stream(
-        st, pp, ll))(state, p, l)
-    prims = set()
-
-    def walk(jaxpr):
-        for eq in jaxpr.eqns:
-            prims.add(eq.primitive.name)
-            for v in eq.params.values():
-                vs = v if isinstance(v, (tuple, list)) else (v,)
-                for s in vs:
-                    if isinstance(s, jax.core.ClosedJaxpr):
-                        walk(s.jaxpr)
-                    elif isinstance(s, jax.core.Jaxpr):
-                        walk(s)
-
-    walk(closed.jaxpr)
-    bad = prims & {"pure_callback", "io_callback", "debug_callback",
-                   "infeed", "outfeed", "device_put"}
-    if bad:
-        raise RuntimeError(f"direct serve path touches the host: {bad}")
+    assert_no_host_callbacks(
+        lambda st, pp, ll: stack.run_stream(st, pp, ll), state, p, l)
 
 
 def measure(n_requests: int = 160, n_sessions: int = 4, warmup: int = 8,
@@ -177,18 +159,6 @@ def measure(n_requests: int = 160, n_sessions: int = 4, warmup: int = 8,
     }
 
 
-def _append_trajectory(r):
-    data = {"trajectory": []}
-    if os.path.exists(OUT_PATH):
-        with open(OUT_PATH) as f:
-            data = json.load(f)
-        data.setdefault("trajectory", [])
-    data["trajectory"].append({"ts": time.time(), **r})
-    with open(OUT_PATH, "w") as f:
-        json.dump(data, f, indent=2)
-        f.write("\n")
-
-
 def run():
     r = measure()
     d, h = r["direct"], r["host"]
@@ -197,7 +167,7 @@ def run():
            row("rpc_tail_lm_host", h["p50_us"],
                f"p99={h['p99_us']:.0f}us p999={h['p999_us']:.0f}us "
                f"speedup_p99={r['speedup_p99']:.2f}x")]
-    _append_trajectory(r)
+    append_trajectory(OUT_PATH, r)
     if r["speedup_p99"] < 2.0:
         raise RuntimeError(
             f"direct p99 {d['p99_us']:.0f}us is not <= 0.5x host-mediated "

@@ -8,11 +8,11 @@ and the netem tick loop paid before `run_stream` existed.  Streamed = an
 in-place `FrameArena` refill + ONE donated `run_stream` dispatch for the
 whole window + one sync.
 
-Writes ``BENCH_stream.json`` and gates: streamed UDP echo CPU pps must be
+Appends a trajectory entry to ``BENCH_stream.json`` (history across PRs,
+like BENCH_rpc_tail.json) and gates: streamed UDP echo CPU pps must be
 >= 3x the per-batch baseline (`make bench-stream` fails otherwise)."""
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import append_trajectory, row
 from repro.apps import echo
 from repro.net import frames as F, rpc
 from repro.net.stack import UdpStack
@@ -92,9 +92,7 @@ def run():
                r["streamed_us"] / r["packets_per_window"],
                f"cpu={r['streamed_pps']:.0f}pps "
                f"speedup={r['speedup']:.2f}x")]
-    with open(OUT_PATH, "w") as f:
-        json.dump({"udp_echo": r}, f, indent=2)
-        f.write("\n")
+    append_trajectory(OUT_PATH, {"udp_echo": r})
     if r["speedup"] < 3.0:
         raise RuntimeError(
             f"streamed UDP echo is only {r['speedup']:.2f}x the per-batch "

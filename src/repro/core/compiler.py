@@ -53,6 +53,7 @@ import jax.numpy as jnp
 from repro.core import deadlock, routing, telemetry
 from repro.core.noc import chain_latency_cycles
 from repro.core.topology import RouteEntry, TileDecl, TopologyConfig
+from repro.obs import flight, reasons
 
 # reference payload for the per-tile NoC latency estimate (the paper's
 # latency measurement uses 64-byte messages)
@@ -431,8 +432,8 @@ class CompiledPipeline:
 
     # ---- state -----------------------------------------------------------
     def init_state(self, with_telemetry: bool = True,
-                   log_entries: int = telemetry.PIPE_LOG_ENTRIES
-                   ) -> Dict[str, Any]:
+                   log_entries: int = telemetry.PIPE_LOG_ENTRIES,
+                   with_obs: bool = True) -> Dict[str, Any]:
         st: Dict[str, Any] = {}
         for node, spec, ctx, *_ in self.stages:
             if spec.init is not None:
@@ -447,7 +448,11 @@ class CompiledPipeline:
                 "nodes": telemetry.make_node_log(len(self.stages),
                                                  log_entries),
                 "logs": {},
+                "drops": telemetry.make_drop_table(len(self.stages),
+                                                   reasons.NUM_REASONS),
             }})
+            if with_obs:
+                st["telemetry"]["obs"] = flight.make_obs(len(self.stages))
         # logs served together over LOG_READ are stacked: every log must
         # share one ring depth (tile inits contribute extra logs, e.g.
         # tcp_cc.*, at telemetry.PIPE_LOG_ENTRIES) — reject a mismatch
@@ -490,15 +495,27 @@ class CompiledPipeline:
 
         telem = state.get("telemetry") if with_telemetry else None
         if telem is not None:
-            telem = {"step": telem["step"] + 1, "logs": dict(telem["logs"])}
-            if "nodes" in state["telemetry"]:
-                telem["nodes"] = state["telemetry"]["nodes"]
+            src = state["telemetry"]
+            telem = {"step": src["step"] + 1, "logs": dict(src["logs"])}
+            for k in ("nodes", "drops"):
+                if k in src:
+                    telem[k] = src[k]
+            if "obs" in src:
+                telem["obs"] = dict(src["obs"])
             state["telemetry"] = telem
         count_nodes = telem is not None and "nodes" in telem
+        count_drops = telem is not None and "drops" in telem
+        obs = telem.get("obs") if telem is not None else None
 
         routes_rt = state.get("routes")
         pkts_in: List[jnp.ndarray] = []
         drops: List[jnp.ndarray] = []
+        drop_blocks: List[jnp.ndarray] = []
+        enters: List[jnp.ndarray] = []
+        exits: List[jnp.ndarray] = []
+        visits: List[jnp.ndarray] = []
+        first_reason = jnp.zeros((n,), jnp.int32)
+        zero_reason = jnp.zeros((n,), jnp.int32)
         ok_of: Dict[str, jnp.ndarray] = {}
         for node, spec, ctx, in_edges, trunk in self.stages:
             if not in_edges:                       # ingress / chain root
@@ -520,6 +537,7 @@ class CompiledPipeline:
                         hit = _match_pred(route, carrier, n)
                     pred = pred | (ok_of[src] & hit)
             carrier = dict(carrier)
+            carrier["drop_reason"] = zero_reason   # tiles overwrite per row
             state, carrier, ok = spec.fn(state, carrier, pred, ctx)
             ok_of[node.name] = pred & ok if ok is not None else pred
             if spec.alive:
@@ -532,6 +550,28 @@ class CompiledPipeline:
             if count_nodes:
                 pkts_in.append(pred.sum(dtype=jnp.int32))
                 drops.append((pred & ~ok_of[node.name]).sum(dtype=jnp.int32))
+            if count_drops or obs is not None:
+                # drop attribution: hard drops (arrived & failed) plus
+                # soft drops (tile set a reason but kept the packet alive,
+                # e.g. an app error reply); hard drops with no tile-
+                # supplied code fall back to UNSPEC
+                reason = carrier["drop_reason"]
+                hard = pred & ~ok_of[node.name]
+                counted = hard | (pred & (reason > 0))
+                reason = jnp.where(counted & (reason == 0),
+                                   reasons.UNSPEC, reason)
+                if count_drops:
+                    drop_blocks.append(telemetry.reason_counts(
+                        reason, counted, reasons.NUM_REASONS))
+                if obs is not None:
+                    first_reason = jnp.where(
+                        (first_reason == 0) & counted, reason, first_reason)
+                    # per-frame stage occupancy proxy: static NoC latency
+                    # estimate + arrival-queue position within the batch
+                    q = jnp.cumsum(pred.astype(jnp.int32)) - 1
+                    enters.append(ctx.lat_cycles + q)
+                    exits.append(ctx.lat_cycles + q + 1)
+                    visits.append(pred)
 
         # ---- fused telemetry: ONE stacked row write for the whole batch --
         # (the per-stage masked appends collapsed into a single
@@ -543,6 +583,42 @@ class CompiledPipeline:
                 telem["step"], jnp.stack(pkts_in), jnp.stack(drops),
                 self._lat_cycles, self._node_idx)
             telem["nodes"] = telemetry.append_stacked(telem["nodes"], rows)
+        if count_drops and drop_blocks:
+            # ONE fused (num_nodes, NUM_REASONS) add per batch — same
+            # egress-DMA discipline as the counter rows above, so DROP_READ
+            # serves totals *through the previous batch*
+            telem["drops"] = telem["drops"] + jnp.stack(drop_blocks)
+
+        # ---- flight recorder + latency histograms (device-resident) ------
+        if obs is not None and visits:
+            nstages = len(self.stages)
+            E = jnp.stack(enters, axis=1)              # (B, nstages)
+            X = jnp.stack(exits, axis=1)
+            V = jnp.stack(visits, axis=1)              # (B, nstages) bool
+            en = (obs["ctrl"]["enable"] != 0)
+            en_i = en.astype(jnp.int32)
+            # per-stage occupancy (queue depth seen) + end-to-end rows
+            occ = X - self._lat_cycles[None, :]
+            hrows = [flight.bucket_counts(occ[:, i], V[:, i])
+                     for i in range(nstages)]
+            e2e = jnp.where(V, X, 0).max(axis=1) - E[:, 0]
+            hrows.append(flight.bucket_counts(e2e, V[:, 0]))
+            obs["histo"] = obs["histo"] + jnp.stack(hrows) * en_i
+            # sampled per-frame trace rows, ONE fused ring append per batch
+            fid = obs["frame_ctr"] + jnp.arange(n, dtype=jnp.int32)
+            sampled = flight.sample_mask(obs["ctrl"], fid)
+            bitmap = jnp.sum(
+                jnp.left_shift(V.astype(jnp.int32),
+                               jnp.arange(nstages, dtype=jnp.int32)[None, :]),
+                axis=1)
+            stepcol = jnp.broadcast_to(telem["step"], (n,))
+            trow = jnp.concatenate(
+                [fid[:, None], stepcol[:, None], bitmap[:, None],
+                 first_reason[:, None],
+                 jnp.stack([E, X], axis=2).reshape(n, 2 * nstages)], axis=1)
+            obs["trace"] = telemetry.append(obs["trace"], trow, sampled)
+            obs["frame_ctr"] = obs["frame_ctr"] + n
+            telem["obs"] = obs
 
         # ---- post-batch table commit (management plane) ------------------
         # A management tile stages table writes in the carrier; they are
@@ -569,6 +645,13 @@ class CompiledPipeline:
                 conn = dict(state["conn"])
                 conn["cc"] = staged["cc"]
                 state["conn"] = conn
+            if staged.get("obs_ctrl") is not None and telem is not None \
+                    and "obs" in telem:
+                # recorder knobs are runtime state: TRACE_SET takes effect
+                # next batch, sampling modulus changes with no retrace
+                o = dict(telem["obs"])
+                o["ctrl"] = staged["obs_ctrl"]
+                telem["obs"] = o
         return state, carrier
 
     # ---- streaming execution (device-resident multi-batch) ---------------

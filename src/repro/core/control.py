@@ -27,6 +27,15 @@ Command encoding (RPC payload, all big-endian u32):
       8 = CC_SET         (a=knob: 0=policy engine-wide (b=0 newreno /
                          1 dctcp), 1=cwnd, 2=ssthresh; target=conn index,
                          b=value): live congestion-control knobs
+      9 = TRACE_SET      (a=enable 0|1, b=sample shift: record 1 in
+                         2**b frames): flight-recorder control — both
+                         knobs are runtime state, no retrace
+     10 = HISTO_READ     (a=row: node index, or num_nodes for the
+                         end-to-end row): one 16-bucket occupancy
+                         histogram row, wide-response format
+     11 = DROP_READ      (a=node index): one 16-wide drop-reason count
+                         row (repro.obs.reasons codes), wide-response
+                         format
 
 Response encoding (RPC payload, all big-endian u32, 8 words fixed):
   [op, version, status, w0, w1, w2, w3, w4]
@@ -36,6 +45,10 @@ Response encoding (RPC payload, all big-endian u32, 8 words fixed):
   [step, packets_in, drops, noc_latency_cycles, tile_index].
   LOG_READ_RANGE responses are longer: [op, version, served_count,
   served_count * 5 row words] (served_count = 0 means dropped).
+  HISTO_READ / DROP_READ reuse the wide layout: [op, version,
+  served_word_count, OBS_ROW_WORDS table words] (0 = bad row / absent
+  table).  Both serve the device tables as of the *previous* batch's
+  egress — the same staleness window as LOG_READ.
 """
 from __future__ import annotations
 
@@ -55,6 +68,9 @@ OP_VERSION = 5
 OP_LOG_READ_RANGE = 6
 OP_RATE_SET = 7
 OP_CC_SET = 8
+OP_TRACE_SET = 9
+OP_HISTO_READ = 10
+OP_DROP_READ = 11
 
 CMD_WORDS = 5
 CMD_BYTES = 4 * CMD_WORDS
@@ -64,6 +80,8 @@ ROW_WORDS = 5           # counter-row words served per log entry
 MAX_RANGE = 8           # entries per LOG_READ_RANGE response frame
 RANGE_RESP_WORDS = 3 + ROW_WORDS * MAX_RANGE
 RANGE_RESP_BYTES = 4 * RANGE_RESP_WORDS
+OBS_ROW_WORDS = 16      # HISTO_READ / DROP_READ row width (one table row)
+OBS_RESP_BYTES = 4 * (3 + OBS_ROW_WORDS)
 
 
 @jax.tree_util.register_dataclass
@@ -167,6 +185,37 @@ def encode_range_response(op, version, served, rows) -> jnp.ndarray:
                       jnp.asarray(version).astype(jnp.uint32),
                       jnp.asarray(served).astype(jnp.uint32)])
     return jnp.concatenate([head, rows.reshape(-1).astype(jnp.uint32)])
+
+
+def encode_obs_response(op, version, served, row_words) -> jnp.ndarray:
+    """One (RANGE_RESP_WORDS,) uint32 wide payload for HISTO_READ /
+    DROP_READ: [op, version, served_word_count, OBS_ROW_WORDS table
+    words, zero pad] — same frame layout as LOG_READ_RANGE so consoles
+    reuse one wide-response parser."""
+    head = jnp.stack([jnp.asarray(op).astype(jnp.uint32),
+                      jnp.asarray(version).astype(jnp.uint32),
+                      jnp.asarray(served).astype(jnp.uint32)])
+    pad = RANGE_RESP_WORDS - 3 - OBS_ROW_WORDS
+    return jnp.concatenate([head, row_words.astype(jnp.uint32),
+                            jnp.zeros((pad,), jnp.uint32)])
+
+
+def serve_table_row(table, row_id, want):
+    """Serve one (OBS_ROW_WORDS,)-padded row of a small device table
+    (histogram / drop-reason counts).  Snapshot semantics: no request
+    buffer — the caller reads whatever the table held at batch ingress,
+    i.e. totals through the previous batch.  Returns (row, served)."""
+    rows, width = table.shape
+    ok = want & (row_id >= 0) & (row_id < rows)
+    row = table[jnp.clip(row_id, 0, rows - 1)].astype(jnp.uint32)
+    row = jnp.where(ok, row, jnp.zeros_like(row))
+    if width < OBS_ROW_WORDS:
+        row = jnp.concatenate(
+            [row, jnp.zeros((OBS_ROW_WORDS - width,), jnp.uint32)])
+    else:
+        row = row[:OBS_ROW_WORDS]
+    served = jnp.where(ok, OBS_ROW_WORDS, 0)
+    return row, served
 
 
 def serve_log_read_range(entries, wrs, fills, log_id, start, count, want):

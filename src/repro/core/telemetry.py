@@ -38,13 +38,15 @@ def make_log(n_entries: int = 256) -> RingLog:
 
 
 def append(log: RingLog, rows: jnp.ndarray, mask: jnp.ndarray) -> RingLog:
-    """Append masked rows (B, LOG_WIDTH); timestamps already in col 0."""
-    n = log.entries.shape[0]
+    """Append masked rows (B, W); timestamps already in col 0.  W is the
+    log's own entry width (LOG_WIDTH for counter logs; the flight
+    recorder's wider trace rows reuse the same fused masked scatter)."""
+    n, w = log.entries.shape
     order = jnp.cumsum(mask.astype(jnp.int32)) - 1
     slots = (log.wr + order) % n
     slots = jnp.where(mask, slots, n)          # parked writes -> OOB row
     padded = jnp.concatenate(
-        [log.entries, jnp.zeros((1, LOG_WIDTH), jnp.int32)], axis=0)
+        [log.entries, jnp.zeros((1, w), jnp.int32)], axis=0)
     padded = padded.at[slots].set(rows)
     return dataclasses.replace(
         log, entries=padded[:n], wr=log.wr + mask.sum())
@@ -141,6 +143,24 @@ def counter_rows(step, pkts_in, drops, lat_cycles,
         jnp.zeros((n,), jnp.int32),
         jnp.zeros((n,), jnp.int32),
     ], axis=1)
+
+
+# ---- drop-reason attribution (repro.obs.reasons codes) --------------------
+# One (num_nodes, num_reasons) int32 table in telemetry state; the executor
+# folds every stage's attributed drops into it with ONE add per batch.
+
+
+def make_drop_table(num_nodes: int, num_reasons: int) -> jnp.ndarray:
+    return jnp.zeros((num_nodes, num_reasons), jnp.int32)
+
+
+def reason_counts(reason: jnp.ndarray, counted: jnp.ndarray,
+                  num_reasons: int) -> jnp.ndarray:
+    """One node's (num_reasons,) counts for one batch: `reason` (B,)
+    int32 codes, `counted` (B,) bool (which rows to attribute)."""
+    hot = (reason[:, None] == jnp.arange(num_reasons)[None, :]) \
+        & counted[:, None]
+    return hot.sum(axis=0, dtype=jnp.int32)
 
 
 def node_view(log: RingLog, index: int) -> RingLog:

@@ -57,6 +57,12 @@ def parse_response(frame: bytes) -> Dict:
                 "!5I", frame, body + 12 + 4 * control.ROW_WORDS * k)))
         out["rows"] = rows
         out["row"] = {}
+    elif w[0] in (control.OP_HISTO_READ, control.OP_DROP_READ):
+        # snapshot table row: status = served word count, then the row
+        served = min(w[2], control.OBS_ROW_WORDS)
+        out["table_row"] = list(struct.unpack_from(
+            f"!{served}I", frame, body + 12)) if served else []
+        out["row"] = {}
     return out
 
 
@@ -210,6 +216,34 @@ class MgmtConsole:
             r["cc"] = ccmod.unpack_row([row["step"], row["packets_in"],
                                         row["drops"], row["noc_latency"],
                                         row["tile_index"]])
+        return state, r
+
+    def set_trace(self, state, enable: bool, shift: int = 6):
+        """Flight-recorder control: record 1 in 2**shift frames when
+        enabled.  Runtime state only — takes effect next batch, and the
+        sampling rate changes with NO retrace of the compiled stream."""
+        state, (r,) = self.roundtrip(state, [
+            (control.OP_TRACE_SET, 0, int(bool(enable)), shift, 0)])
+        return state, r
+
+    def read_histo(self, state, tile: Optional[str] = None):
+        """One occupancy-histogram row (16 power-of-two buckets) from the
+        device: a tile's per-stage occupancy, or the end-to-end row when
+        `tile` is None.  Served through the previous batch."""
+        row_id = len(self.node_ids) if tile is None else self.node_ids[tile]
+        state, (r,) = self.roundtrip(state, [
+            (control.OP_HISTO_READ, 0, row_id, 0, 0)])
+        return state, r
+
+    def read_drops(self, state, tile: str):
+        """One tile's drop-reason counts as {reason_name: count} (nonzero
+        only).  Served through the previous batch."""
+        from repro.obs import reasons
+        state, (r,) = self.roundtrip(state, [
+            (control.OP_DROP_READ, 0, self.node_ids[tile], 0, 0)])
+        if r.get("table_row"):
+            r["reasons"] = {reasons.name(i): c
+                            for i, c in enumerate(r["table_row"]) if c}
         return state, r
 
     def version(self, state) -> Tuple[Dict, int]:

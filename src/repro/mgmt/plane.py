@@ -186,6 +186,16 @@ def mgmt_tile(state, carrier, pred, ctx):
     wrs = (jnp.concatenate(blocks_w) if blocks_w
            else jnp.zeros((1,), jnp.int32))
 
+    # observability tables (snapshot reads: whatever the executor wrote at
+    # the *previous* batch's egress — same staleness window as LOG_READ)
+    obsb = (telem or {}).get("obs")
+    has_obs = obsb is not None
+    histo0 = (obsb["histo"] if has_obs
+              else jnp.zeros((1, control.OBS_ROW_WORDS), jnp.int32))
+    dropt = (telem or {}).get("drops")
+    has_drops = dropt is not None
+    drops0 = dropt if has_drops else jnp.zeros((1, 1), jnp.int32)
+
     # dispatch-side token buckets + congestion-control knobs (if present)
     has_rate = "rate" in state
     rate0 = (state["rate"] if has_rate
@@ -206,6 +216,10 @@ def mgmt_tile(state, carrier, pred, ctx):
         "tkeys": tkeys0, "tvals": tvals0,
         "rate": dict(rate0),
         "cc_cwnd": cc_cwnd0, "cc_ssth": cc_ssth0, "cc_pol": cc_pol0,
+        "obs_en": (obsb["ctrl"]["enable"] if has_obs
+                   else jnp.zeros((), jnp.int32)),
+        "obs_shift": (obsb["ctrl"]["shift"] if has_obs
+                      else jnp.zeros((), jnp.int32)),
         # outstanding readbacks were serviced between batches (drain)
         "fills": jnp.zeros((max(n_logs, 1),), jnp.int32),
     }
@@ -291,6 +305,24 @@ def mgmt_tile(state, carrier, pred, ctx):
                             c["cc_ssth"])
         cc_ok = pol_ok | cwnd_ok | ssth_ok
 
+        # TRACE_SET — flight-recorder knobs: both are runtime state, so
+        # the sampling modulus changes with no retrace; staged like any
+        # table write, live next batch
+        is_trace = v & (op == control.OP_TRACE_SET) & has_obs
+        trace_ok = is_trace & (b >= 0) & (b < 16)
+        obs_en = jnp.where(trace_ok, (a != 0).astype(jnp.int32),
+                           c["obs_en"])
+        obs_shift = jnp.where(trace_ok, b, c["obs_shift"])
+
+        # HISTO_READ / DROP_READ — one snapshot table row each, served
+        # in the wide (range-layout) response frame
+        want_h = v & (op == control.OP_HISTO_READ) & has_obs
+        hrow, hserved = control.serve_table_row(histo0, a, want_h)
+        want_d = v & (op == control.OP_DROP_READ) & has_drops
+        drow, dserved = control.serve_table_row(drops0, a, want_d)
+        want_obs = want_h | want_d
+        obs_served = jnp.where(want_h, hserved, dserved)
+
         # LOG_READ — serve a counter row, REQ_BUF backpressure
         want = v & (op == control.OP_LOG_READ) & (n_logs > 0)
         fills, row, accepted = control.serve_log_read(
@@ -303,7 +335,8 @@ def mgmt_tile(state, carrier, pred, ctx):
             jnp.minimum(cc.astype(jnp.int32), max_fit), want_rng)
 
         is_ver = v & (op == control.OP_VERSION)
-        applied = nat_ok | health_ok | route_ok | rate_ok | cc_ok
+        applied = nat_ok | health_ok | route_ok | rate_ok | cc_ok \
+            | trace_ok
         version = c["version"] + applied.astype(jnp.int32)
         status = (applied | accepted | is_ver).astype(jnp.uint32)
         plain = control.encode_response(w[0], version, status, row)
@@ -311,11 +344,15 @@ def mgmt_tile(state, carrier, pred, ctx):
             plain, jnp.zeros((control.RANGE_RESP_WORDS
                               - control.RESP_WORDS,), jnp.uint32)])
         rng = control.encode_range_response(w[0], version, served, rng_rows)
-        resp = jnp.where(want_rng, rng, plain)
+        wide = control.encode_obs_response(
+            w[0], version, obs_served, jnp.where(want_h, hrow, drow))
+        resp = jnp.where(want_rng, rng, jnp.where(want_obs, wide, plain))
         blen = jnp.where(
             want_rng,
             12 + 4 * control.ROW_WORDS * served,
-            jnp.full_like(served, control.RESP_BYTES)).astype(jnp.int32)
+            jnp.where(want_obs, 12 + 4 * obs_served,
+                      jnp.full_like(served,
+                                    control.RESP_BYTES))).astype(jnp.int32)
 
         nc = {"version": version,
               "last_op": jnp.where(applied, op, c["last_op"]),
@@ -324,6 +361,7 @@ def mgmt_tile(state, carrier, pred, ctx):
               "healthy": healthy, "tkeys": tkeys, "tvals": tvals,
               "rate": rate,
               "cc_cwnd": cc_cwnd, "cc_ssth": cc_ssth, "cc_pol": cc_pol,
+              "obs_en": obs_en, "obs_shift": obs_shift,
               "fills": fills}
         return nc, (resp, blen)
 
@@ -380,5 +418,8 @@ def mgmt_tile(state, carrier, pred, ctx):
         cc_new["ssthresh"] = carry["cc_ssth"]
         cc_new["policy"] = carry["cc_pol"]
         staged["cc"] = cc_new
+    if has_obs:
+        staged["obs_ctrl"] = {"enable": carry["obs_en"],
+                              "shift": carry["obs_shift"]}
     carrier["mgmt_staged"] = staged
     return state, carrier, None

@@ -13,6 +13,13 @@ PROTO_UDP = 17
 
 def parse(payload, length):
     """Returns (stripped, new_length, meta, ok).  ok=False -> drop."""
+    return parse_ex(payload, length)[:4]
+
+
+def parse_ex(payload, length):
+    """`parse` plus a per-packet drop-reason code (repro.obs.reasons):
+    why ok is False, first failing check wins.  0 = not dropped."""
+    from repro.obs import reasons as R
     ver_ihl = B.u8(payload, 0)
     version = ver_ihl >> 4
     ihl = (ver_ihl & 0xF).astype(jnp.int32) * 4
@@ -23,12 +30,21 @@ def parse(payload, length):
     src_ip = B.be32(payload, 12)
     dst_ip = B.be32(payload, 16)
     csum = B.checksum16(payload, 0, ihl)   # over header; valid iff == 0
-    ok = (version == 4) & (csum == 0) & (ttl > 0) & \
-         (total_len.astype(jnp.int32) <= length)
+    ok_ver = version == 4
+    ok_csum = csum == 0
+    ok_ttl = ttl > 0
+    ok_len = total_len.astype(jnp.int32) <= length
+    ok = ok_ver & ok_csum & ok_ttl & ok_len
+    reason = jnp.where(
+        ~ok_ver, R.IP_VERSION,
+        jnp.where(~ok_csum, R.IP_CSUM,
+                  jnp.where(~ok_ttl, R.IP_TTL,
+                            jnp.where(~ok_len, R.IP_LEN, R.NONE))))
     stripped = B.shift_left(payload, ihl)
     meta = {"ip_proto": proto, "src_ip": src_ip, "dst_ip": dst_ip,
             "ip_ttl": ttl, "ip_total_len": total_len, "ip_ecn": ecn}
-    return stripped, total_len.astype(jnp.int32) - ihl, meta, ok
+    return (stripped, total_len.astype(jnp.int32) - ihl, meta, ok,
+            reason.astype(jnp.int32))
 
 
 def build(payload, length, meta, ident=None):

@@ -25,14 +25,25 @@ MSG_LM_RELEASE = 7
 
 
 def parse(payload, length):
+    return parse_ex(payload, length)[:4]
+
+
+def parse_ex(payload, length):
+    """`parse` plus a per-packet drop-reason code (repro.obs.reasons)."""
+    from repro.obs import reasons as R
     magic = B.be16(payload, 0)
     msg_type = B.u8(payload, 2)
     req_id = B.be32(payload, 3)
     plen = B.be16(payload, 7)
-    ok = (magic == MAGIC) & (plen.astype(jnp.int32) + HLEN <= length)
+    ok_magic = magic == MAGIC
+    ok_len = plen.astype(jnp.int32) + HLEN <= length
+    ok = ok_magic & ok_len
+    reason = jnp.where(~ok_magic, R.RPC_MAGIC,
+                       jnp.where(~ok_len, R.RPC_LEN, R.NONE))
     body = B.shift_left(payload, HLEN)
-    return body, plen.astype(jnp.int32), {"msg_type": msg_type,
-                                          "req_id": req_id}, ok
+    return (body, plen.astype(jnp.int32),
+            {"msg_type": msg_type, "req_id": req_id}, ok,
+            reason.astype(jnp.int32))
 
 
 def build(payload, length, msg_type, req_id):

@@ -200,11 +200,13 @@ class UdpStack:
                  topo: Optional[TopologyConfig] = None,
                  nat_entries=None, with_telemetry: bool = True,
                  mgmt_port: Optional[int] = None,
-                 options: Optional[dict] = None):
+                 options: Optional[dict] = None,
+                 with_obs: bool = True):
         self.topo = topo if topo is not None else udp_topology(apps)
         self.apps = apps
         self.local_ip = local_ip
         self.with_telemetry = with_telemetry
+        self.with_obs = with_obs
         self.mgmt_port = mgmt_port
         self.mgmt_meta = None
         if mgmt_port is not None:
@@ -223,7 +225,8 @@ class UdpStack:
                     (self.mgmt_meta or {}).get("ctrl_in", "ctrl_in"))
 
     def init_state(self):
-        st = self.pipeline.init_state(with_telemetry=self.with_telemetry)
+        st = self.pipeline.init_state(with_telemetry=self.with_telemetry,
+                                      with_obs=self.with_obs)
         st["rx_count"] = jnp.zeros((), jnp.int32)
         return st
 
@@ -315,7 +318,8 @@ class TcpStack:
                  with_telemetry: bool = True,
                  mgmt_port: Optional[int] = None,
                  cc_policy: Optional[str] = None,
-                 options: Optional[dict] = None):
+                 options: Optional[dict] = None,
+                 with_obs: bool = True):
         self.topo = topo if topo is not None else \
             tcp_topology(with_nat, cc_policy=cc_policy)
         self.with_nat = with_nat
@@ -323,6 +327,7 @@ class TcpStack:
         self.max_conns = max_conns
         self.nat_entries = nat_entries or []
         self.with_telemetry = with_telemetry
+        self.with_obs = with_obs
         self.mgmt_port = mgmt_port
         self.mgmt_meta = None
         if mgmt_port is not None:
@@ -351,7 +356,8 @@ class TcpStack:
                 f"route tables {sorted(clash)} are keyed by both the RX "
                 f"and TX pipelines; re-name or re-place the source tiles "
                 f"so each keyed route belongs to one pipeline")
-        st = self.rx_pipe.init_state(with_telemetry=self.with_telemetry)
+        st = self.rx_pipe.init_state(with_telemetry=self.with_telemetry,
+                                     with_obs=self.with_obs)
         # the TX chain gets no RingLogs: tx_frame returns only the built
         # frame (original API), so TX-side log writes could never persist —
         # telemetry covers the RX path

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.core import telemetry
 from repro.core.compiler import register_tile
 from repro.net import eth, ipinip, ipv4, nat as nat_mod, rpc, tcp, udp
+from repro.obs import reasons
 from repro.transport import cc as ccmod, rate as rate_mod
 
 # ---------------------------------------------------------------------------
@@ -37,10 +38,11 @@ def eth_rx(state, carrier, pred, ctx):
 
 @register_tile("ip_rx", alive=True, rewrites=("ip_proto",))
 def ip_rx(state, carrier, pred, ctx):
-    p, l, m2, ok = ipv4.parse(carrier["payload"], carrier["length"])
+    p, l, m2, ok, reason = ipv4.parse_ex(carrier["payload"],
+                                         carrier["length"])
     m = dict(carrier["meta"])
     m.update(m2)
-    carrier.update(payload=p, length=l, meta=m)
+    carrier.update(payload=p, length=l, meta=m, drop_reason=reason)
     return state, carrier, ok
 
 
@@ -55,20 +57,25 @@ def udp_rx(state, carrier, pred, ctx):
     UDP tile: apps receive framed request bodies, not raw datagrams).
     Dispatch applies the per-port token buckets here: packets beyond a
     rate-limited port's bucket drop exactly like a parse failure."""
-    p, l, m, ok_udp = udp.parse(carrier["payload"], carrier["length"],
-                                carrier["meta"])
-    body, blen, rmeta, ok_rpc = rpc.parse(p, l)
+    p, l, m, ok_udp, r_udp = udp.parse_ex(carrier["payload"],
+                                          carrier["length"],
+                                          carrier["meta"])
+    body, blen, rmeta, ok_rpc, r_rpc = rpc.parse_ex(p, l)
     m = dict(m)
     m.update(rmeta)
     carrier.update(payload=p, length=l, meta=m, body=body, blen=blen,
                    out_body=body, out_blen=blen)
     ok = ok_udp & ok_rpc
+    # first failing layer attributes the drop: udp, then rpc, then rate
+    reason = jnp.where(~ok_udp, r_udp, jnp.where(~ok_rpc, r_rpc, 0))
     if "rate" in state:
         rt, ok_rate = rate_mod.apply(state["rate"], m["dst_port"],
                                      pred & ok)
         state = dict(state)
         state["rate"] = rt
+        reason = jnp.where(ok & ~ok_rate, reasons.RATE_LIMIT, reason)
         ok = ok & ok_rate
+    carrier["drop_reason"] = reason
     return state, carrier, ok
 
 
@@ -143,6 +150,18 @@ def tcp_rx(state, carrier, pred, ctx):
     meng = dict(m)
     for k in ("src_ip", "src_port", "dst_port", "tcp_flags", "ip_ecn"):
         meng[k] = jnp.where(pred, m[k], jnp.zeros_like(m[k]))
+    # drop attribution (soft: the engine rejects internally): a segment
+    # with no connection-table match that isn't opening one is what the
+    # hardware tile's lookup drops — count it per reason, pre-engine
+    c0 = state["conn"]
+    hit = ((c0["state"][None, :] != tcp.CLOSED)
+           & (c0["remote_ip"][None, :] == meng["src_ip"][:, None])
+           & (c0["remote_port"][None, :] == meng["src_port"][:, None])
+           & (c0["local_port"][None, :] == meng["dst_port"][:, None])
+           ).any(axis=1)
+    is_syn = (meng["tcp_flags"] & tcp.SYN) != 0
+    carrier["drop_reason"] = jnp.where(
+        pred & ~hit & ~is_syn, reasons.TCP_NO_CONN, 0).astype(jnp.int32)
     conn, resps = tcp.rx_batch(state["conn"], data,
                                jnp.where(pred, dlen, 0), meng)
     state = dict(state)
@@ -288,6 +307,16 @@ def lm_serve(state, carrier, pred, ctx):
     apps[ctx.name] = st
     state = dict(state)
     state["apps"] = apps
+    # soft-drop attribution from the reply's error sentinel (the request
+    # was answered with an ERR_*, not served)
+    from repro.net import bytesops as B
+    n_out = B.be16(nb, 4)
+    carrier["drop_reason"] = jnp.where(
+        pred & (n_out == lm_server.ERR_BAD_REQUEST), reasons.APP_BAD_REQ,
+        jnp.where(pred & (n_out == lm_server.ERR_NO_SESSION),
+                  reasons.APP_NO_SESSION,
+                  jnp.where(pred & (n_out == lm_server.ERR_NO_SLOT),
+                            reasons.APP_NO_SLOT, 0))).astype(jnp.int32)
     carrier["out_body"] = jnp.where(pred[:, None], nb, carrier["out_body"])
     carrier["out_blen"] = jnp.where(pred, nl, carrier["out_blen"])
     info = dict(carrier["info"])
@@ -319,8 +348,12 @@ def rs_serve(state, carrier, pred, ctx):
         info[ctx.name] = jnp.zeros((n,), bool)
         carrier["info"] = info
         carrier["out_blen"] = jnp.where(pred, 0, carrier["out_blen"])
+        carrier["drop_reason"] = jnp.where(
+            pred, reasons.APP_BAD_REQ, 0).astype(jnp.int32)
         return state, carrier, None
     valid = pred & (blen >= RS.REQ)
+    carrier["drop_reason"] = jnp.where(
+        pred & ~valid, reasons.APP_BAD_REQ, 0).astype(jnp.int32)
 
     def encode(data):
         parity = rs_ops.encode_blocks(data, k=RS.K, p=RS.P,

@@ -11,6 +11,14 @@ UDP_HLEN = 8
 
 def parse(payload, length, meta):
     """Returns (stripped, new_length, meta', ok)."""
+    return parse_ex(payload, length, meta)[:4]
+
+
+def parse_ex(payload, length, meta):
+    """`parse` plus a per-packet drop-reason code (repro.obs.reasons):
+    the runt check is attributed first (it poisons everything after),
+    then the length-vs-IP check, then the checksum."""
+    from repro.obs import reasons as R
     src_port = B.be16(payload, 0)
     dst_port = B.be16(payload, 2)
     udp_len = B.be16(payload, 4)
@@ -20,17 +28,22 @@ def parse(payload, length, meta):
                                  udp_len)
     full = B.checksum16_with_pseudo(payload, 0, udp_len.astype(jnp.int32),
                                     pseudo)
-    ok = (csum == 0) | (full == 0)         # csum 0 = disabled (RFC 768)
-    ok &= udp_len.astype(jnp.int32) <= length
+    ok_csum = (csum == 0) | (full == 0)    # csum 0 = disabled (RFC 768)
+    ok_len = udp_len.astype(jnp.int32) <= length
     # runt header: udp_len < 8 would yield a negative payload length that
     # poisons every downstream length computation — reject AND clamp
-    ok &= udp_len.astype(jnp.int32) >= UDP_HLEN
+    ok_runt = udp_len.astype(jnp.int32) >= UDP_HLEN
+    ok = ok_csum & ok_len & ok_runt
+    reason = jnp.where(
+        ~ok_runt, R.RUNT_UDP,
+        jnp.where(~ok_len, R.UDP_LEN,
+                  jnp.where(~ok_csum, R.UDP_CSUM, R.NONE)))
     stripped = B.shift_left(payload, UDP_HLEN)
     m = dict(meta)
     m.update({"src_port": src_port, "dst_port": dst_port,
               "udp_len": udp_len})
     plen = jnp.maximum(udp_len.astype(jnp.int32) - UDP_HLEN, 0)
-    return stripped, plen, m, ok
+    return stripped, plen, m, ok, reason.astype(jnp.int32)
 
 
 def build(payload, length, meta, with_checksum: bool = True):

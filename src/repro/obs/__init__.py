@@ -1,0 +1,17 @@
+"""Device-resident observability (paper §4.6 made operable).
+
+Three device-side facilities, all living inside the ``run_stream`` scan
+with zero host callbacks, plus a host-side exporter:
+
+  * :mod:`repro.obs.reasons` — the drop-reason registry: every tile that
+    rejects a packet attributes the drop to a small reason code, and the
+    executor accumulates a per-tile ``(reason -> count)`` table in
+    telemetry state.
+  * :mod:`repro.obs.flight` — the sampled packet flight recorder (per-
+    frame trace rows: frame id, tile-visit bitmap, per-stage enter/exit
+    cycle estimates) and the fixed power-of-two-bucket latency
+    histograms.  Sample rate and enable are *runtime* state — the
+    management plane's ``TRACE_SET`` changes them live, no retrace.
+  * :mod:`repro.obs.export` — renders captured flight-recorder rows as
+    Chrome/Perfetto trace-event JSON and a ``top``-style text summary.
+"""

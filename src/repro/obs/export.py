@@ -1,0 +1,143 @@
+"""Host-side rendering of the device-resident observability state.
+
+Everything here runs *after* the stream: it reads the ``telemetry`` block
+of a stack state (flight-recorder ring, drop-reason table, latency
+histograms) and renders it as
+
+  * Chrome/Perfetto trace-event JSON (``to_trace_events`` /
+    ``write_perfetto``) — one track per sampled frame, one complete
+    ("ph": "X") slice per tile visit, so ``chrome://tracing`` or
+    ui.perfetto.dev shows each frame walking the pipeline; and
+  * a ``top``-style text summary (``summary``) — per-tile packet/drop
+    counters, the drop-reason breakdown, and p50/p99 occupancy straight
+    from the device histograms.
+
+No device computation happens here; ``jax.device_get`` at entry is the
+only transfer.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.obs import flight, reasons
+
+
+def trace_rows(obs: Dict) -> List[Dict]:
+    """Decode the flight-recorder ring into per-frame dicts (oldest
+    first).  Each row: frame_id, step, visited (node-index list),
+    drop_reason, enter/exit (per visited node)."""
+    ring = jax.device_get(obs["trace"].entries)
+    wr = int(jax.device_get(obs["trace"].wr))
+    depth = ring.shape[0]
+    nstages = (ring.shape[1] - flight.FIXED_WORDS) // 2
+    count = min(wr, depth)
+    start = (wr - count) % depth
+    out = []
+    for k in range(count):
+        row = ring[(start + k) % depth]
+        bitmap = int(row[2])
+        visited = [i for i in range(nstages) if bitmap >> i & 1]
+        f = flight.FIXED_WORDS
+        out.append({
+            "frame_id": int(row[0]),
+            "step": int(row[1]),
+            "visited": visited,
+            "drop_reason": int(row[3]),
+            "enter": {i: int(row[f + 2 * i]) for i in visited},
+            "exit": {i: int(row[f + 2 * i + 1]) for i in visited},
+        })
+    return out
+
+
+def to_trace_events(obs: Dict, order: Sequence[str]) -> List[Dict]:
+    """Chrome trace-event list: pid 0 = the pipeline, one tid per sampled
+    frame, one complete slice per tile visit (ts/dur in the NoC cycle
+    estimate's units)."""
+    events: List[Dict] = []
+    seen_tids = set()
+    for row in trace_rows(obs):
+        tid = row["frame_id"]
+        if tid not in seen_tids:
+            seen_tids.add(tid)
+            label = f"frame {tid}"
+            if row["drop_reason"]:
+                label += f" [{reasons.name(row['drop_reason'])}]"
+            events.append({"ph": "M", "name": "thread_name", "pid": 0,
+                           "tid": tid, "args": {"name": label}})
+        for i in row["visited"]:
+            events.append({
+                "ph": "X", "pid": 0, "tid": tid,
+                "name": order[i] if i < len(order) else f"node{i}",
+                "ts": row["enter"][i],
+                "dur": row["exit"][i] - row["enter"][i],
+                "args": {"step": row["step"],
+                         "drop_reason": reasons.name(row["drop_reason"])},
+            })
+    return events
+
+
+def write_perfetto(path: str, state: Dict, pipeline) -> int:
+    """Write the state's flight recorder as a ``.perfetto.json`` trace
+    (Chrome trace-event format).  Returns the number of events written."""
+    obs = state["telemetry"]["obs"]
+    events = to_trace_events(obs, pipeline.order)
+    events.insert(0, {"ph": "M", "name": "process_name", "pid": 0,
+                      "args": {"name": "beehive-pipeline"}})
+    with open(path, "w") as f:
+        json.dump({"traceEvents": events, "displayTimeUnit": "ns"}, f)
+    return len(events)
+
+
+def drop_table(state: Dict, pipeline) -> Dict[str, Dict[str, int]]:
+    """{node: {reason_name: count}} for every nonzero cell."""
+    tab = np.asarray(jax.device_get(state["telemetry"]["drops"]))
+    out: Dict[str, Dict[str, int]] = {}
+    for i, nm in enumerate(pipeline.order):
+        nz = {reasons.name(r): int(c) for r, c in enumerate(tab[i]) if c}
+        if nz:
+            out[nm] = nz
+    return out
+
+
+def summary(state: Dict, pipeline, top: int = 5) -> str:
+    """``top``-style text panel: per-tile counters from the stacked node
+    log's latest row, the drop-reason breakdown, and occupancy p50/p99
+    from the device histograms."""
+    telem = state["telemetry"]
+    lines = [f"{'TILE':<14}{'PKTS':>8}{'DROPS':>8}{'LAT~CYC':>9}"
+             f"{'OCC p50':>9}{'OCC p99':>9}"]
+    obs = telem.get("obs")
+    histo = (np.asarray(jax.device_get(obs["histo"]))
+             if obs is not None else None)
+    nodes = jax.device_get(telem["nodes"].entries)
+    wr = int(jax.device_get(telem["nodes"].wr))
+    latest = nodes[(wr - 1) % nodes.shape[0]] if wr else None
+    for i, nm in enumerate(pipeline.order):
+        pkts, drops, lat = (0, 0, 0)
+        if latest is not None:
+            pkts, drops, lat = (int(latest[i][1]), int(latest[i][2]),
+                                int(latest[i][3]))
+        p50 = p99 = "-"
+        if histo is not None and histo[i].sum():
+            p50 = flight.percentile(histo[i], 0.50)
+            p99 = flight.percentile(histo[i], 0.99)
+        lines.append(f"{nm:<14}{pkts:>8}{drops:>8}{lat:>9}"
+                     f"{str(p50):>9}{str(p99):>9}")
+    if histo is not None and histo[-1].sum():
+        lines.append(f"{'(end-to-end)':<14}{'':>8}{'':>8}{'':>9}"
+                     f"{str(flight.percentile(histo[-1], 0.50)):>9}"
+                     f"{str(flight.percentile(histo[-1], 0.99)):>9}")
+    per_node = drop_table(state, pipeline)
+    if per_node:
+        lines.append("")
+        lines.append("top drop reasons:")
+        flat = [(n, r, c) for n, rs in per_node.items()
+                for r, c in rs.items()]
+        flat.sort(key=lambda t: -t[2])
+        for n, r, c in flat[:top]:
+            lines.append(f"  {n:<14}{r:<16}{c:>8}")
+    return "\n".join(lines)

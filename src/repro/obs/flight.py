@@ -1,0 +1,114 @@
+"""Sampled packet flight recorder + in-device latency histograms.
+
+All state lives under ``telemetry["obs"]`` in the stack state pytree, so
+it rides the ``run_stream`` scan carry like every other table — recording
+is pure jnp, zero host callbacks, and the whole facility is donated along
+with the rest of the state.
+
+Flight-recorder row layout (int32, width ``4 + 2 * num_nodes``)::
+
+    [frame_id, step, visit_bitmap, drop_reason,
+     enter_0, exit_0, enter_1, exit_1, ...]
+
+``frame_id`` is a monotonically increasing per-frame counter (survives
+across batches and stream windows), ``step`` the batch counter,
+``visit_bitmap`` bit i set iff the frame arrived at execution node i,
+``drop_reason`` the first :mod:`repro.obs.reasons` code attributed to the
+frame (0 = delivered).  ``enter_i``/``exit_i`` are cycle estimates on the
+NoC cost model: a frame enters node i at the node's compile-time chain
+latency plus its position in the batch's arrival queue at that node, and
+occupies the node for one service slot — so enter/exit vary per frame
+with real traffic (queueing), not just per topology.
+
+Sampling: a frame is recorded iff ``enable != 0`` and ``frame_id % N ==
+0`` with ``N = 2**shift``.  Both knobs are *runtime state* (``ctrl``),
+rewritable live by the management plane's ``TRACE_SET`` — no retrace.
+
+Histograms: fixed power-of-two buckets (bucket k counts values v with
+``2**k <= v < 2**(k+1)``; bucket 0 additionally catches v <= 1).  One row
+per node of per-stage *occupancy* (queue position + service: what the
+frame saw at that tile) plus one end-to-end row (ingress enter to the
+last visited node's exit), accumulated for every frame of every batch
+with one fused add — p50/p99 come straight from device state.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.core import telemetry
+
+TRACE_ENTRIES = 256    # flight-recorder ring depth
+NUM_BUCKETS = 16       # power-of-two histogram buckets
+MAX_NODES = 28         # visit bitmap must fit an int32 alongside nothing
+DEFAULT_SHIFT = 6      # 1-in-64 sampling when first enabled
+FIXED_WORDS = 4        # row words before the per-node enter/exit pairs
+
+
+def trace_width(num_nodes: int) -> int:
+    return FIXED_WORDS + 2 * num_nodes
+
+
+def make_obs(num_nodes: int,
+             trace_entries: int = TRACE_ENTRIES) -> Dict:
+    """The ``telemetry["obs"]`` block for a pipeline of `num_nodes`
+    stages.  Recorder starts disabled; histograms are recorded whenever
+    the recorder is enabled."""
+    if num_nodes > MAX_NODES:
+        raise ValueError(
+            f"flight recorder supports at most {MAX_NODES} execution "
+            f"nodes (visit bitmap is one int32); got {num_nodes}")
+    return {
+        "ctrl": {"enable": jnp.zeros((), jnp.int32),
+                 "shift": jnp.full((), DEFAULT_SHIFT, jnp.int32)},
+        "frame_ctr": jnp.zeros((), jnp.int32),
+        "trace": telemetry.RingLog(
+            entries=jnp.zeros((trace_entries, trace_width(num_nodes)),
+                              jnp.int32),
+            wr=jnp.zeros((), jnp.int32),
+            req_fill=jnp.zeros((), jnp.int32)),
+        # per-stage occupancy rows (num_nodes) + one end-to-end row
+        "histo": jnp.zeros((num_nodes + 1, NUM_BUCKETS), jnp.int32),
+    }
+
+
+def bucket_of(v: jnp.ndarray) -> jnp.ndarray:
+    """Power-of-two bucket index of positive int values (vectorized)."""
+    v = jnp.maximum(v.astype(jnp.int32), 1)
+    b = jnp.floor(jnp.log2(v.astype(jnp.float32))).astype(jnp.int32)
+    return jnp.clip(b, 0, NUM_BUCKETS - 1)
+
+
+def bucket_counts(values: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """(NUM_BUCKETS,) histogram of `values` where `mask` (one batch)."""
+    b = bucket_of(values)
+    hot = (b[:, None] == jnp.arange(NUM_BUCKETS)[None, :]) & mask[:, None]
+    return hot.sum(axis=0, dtype=jnp.int32)
+
+
+def sample_mask(ctrl: Dict, frame_ids: jnp.ndarray) -> jnp.ndarray:
+    """(B,) bool — which frames of the batch the recorder captures.  The
+    1-in-2**shift modulus is computed from runtime state, so TRACE_SET
+    changes the rate with no retrace."""
+    n_mask = jnp.left_shift(jnp.int32(1), ctrl["shift"]) - 1
+    return (ctrl["enable"] != 0) & ((frame_ids & n_mask) == 0)
+
+
+def bucket_lo(k: int) -> int:
+    """Smallest value counted by bucket k (host-side display helper)."""
+    return 1 if k == 0 else 2 ** k
+
+
+def percentile(counts, q: float) -> int:
+    """Upper-bound estimate of the q-quantile (q in [0,1]) from one
+    histogram row — host-side, for consoles and summaries."""
+    import numpy as np
+    c = np.asarray(counts, dtype=np.int64)
+    total = int(c.sum())
+    if total == 0:
+        return 0
+    cum = np.cumsum(c)
+    k = int(np.searchsorted(cum, q * total, side="left"))
+    k = min(k, NUM_BUCKETS - 1)
+    return 2 ** (k + 1) - 1
