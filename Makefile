@@ -12,13 +12,19 @@ PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
 .PHONY: test-fast test bench bench-mgmt bench-tcp-loss bench-stream \
-        bench-rpc-tail bench-obs
+        bench-rpc-tail bench-obs lint-reasons
 
 test-fast:
 	$(PY) -m pytest -q -m "not slow"
 
 test:
 	$(PY) -m pytest -q
+
+# static drop-reason coverage: every registered tile that can squash
+# `pred` must attribute a reason code (also run as a test in
+# tests/test_export.py)
+lint-reasons:
+	$(PY) -m repro.obs.lint
 
 bench:
 	$(PY) benchmarks/run.py
@@ -44,8 +50,9 @@ bench-stream:
 bench-rpc-tail:
 	$(PY) benchmarks/bench_rpc_tail.py
 
-# observability gate: flight recorder (1/64 sampling) + histograms must
-# stay within 10% of the telemetry-only run_stream baseline, with zero
-# host callbacks in the scanned region; APPENDS to BENCH_obs.json
+# observability gate: pull (flight recorder @1/64 + histograms) AND push
+# (postcards + series ring + SLO watchdog) must each stay within 10% of
+# the telemetry-only run_stream baseline, with zero host callbacks in
+# the scanned region; APPENDS to BENCH_obs.json
 bench-obs:
 	$(PY) benchmarks/bench_obs.py

@@ -92,7 +92,9 @@ def run():
                r["streamed_us"] / r["packets_per_window"],
                f"cpu={r['streamed_pps']:.0f}pps "
                f"speedup={r['speedup']:.2f}x")]
-    append_trajectory(OUT_PATH, {"udp_echo": r})
+    append_trajectory(OUT_PATH, r)       # flat entry, same shape as the
+    # other BENCH_*.json trajectories (older points nested it under
+    # "udp_echo")
     if r["speedup"] < 3.0:
         raise RuntimeError(
             f"streamed UDP echo is only {r['speedup']:.2f}x the per-batch "

@@ -9,20 +9,26 @@ goodput retained, and the p99 / max recovery gap (ticks between
 consecutive in-order advances at the client — the recovery-latency tail).
 
 Gate (ISSUE 3 acceptance): at 1% loss the transfer must complete with
-zero permanent stalls and sustain >= 20% of the lossless goodput."""
+zero permanent stalls and sustain >= 20% of the lossless goodput.
+
+Appends a trajectory entry to ``BENCH_tcp_loss.json`` (history across
+PRs, like the other BENCH_*.json files)."""
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import append_trajectory, row
 from repro.net import frames as F
 from repro.net.stack import TcpStack
 from repro.netem import Link, LinkConfig, LinuxTcpClient, StackEndpoint, \
     run_transfer
 
 IP_C, IP_S = F.ip("10.0.0.2"), F.ip("10.0.0.1")
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_tcp_loss.json")
 MSS = 1024
 PAYLOAD_BYTES = 32768
 LOSS_RATES = (0.0, 0.001, 0.01)
@@ -51,6 +57,7 @@ def run():
 
     out = []
     base = None
+    traj = {"payload_bytes": PAYLOAD_BYTES, "mss": MSS}
     for loss in LOSS_RATES:
         stats, us = _transfer(srv, loss)
         if not stats.complete:
@@ -61,6 +68,10 @@ def run():
         rel = stats.goodput / base
         cc = srv.state["conn"]["cc"]
         retx = int(cc["retx_fast"][0]) + int(cc["retx_timer"][0])
+        traj[f"loss_{loss:g}"] = {
+            "us": us, "goodput_B_per_tick": stats.goodput, "rel": rel,
+            "p99_gap": float(stats.p99_gap), "max_gap": int(stats.max_gap),
+            "retx": retx}
         out.append(row(
             f"tcp_loss_{loss:g}", us,
             f"goodput={stats.goodput:.0f}B/tick rel={rel:.0%} "
@@ -70,6 +81,7 @@ def run():
             raise RuntimeError(
                 f"1% loss sustains only {rel:.0%} of lossless goodput "
                 f"(gate: >= 20%)")
+    append_trajectory(OUT_PATH, traj)
 
     # harness RX path: per-batch dispatch loop vs arena-streamed push
     # (stream=False forces the pre-streaming per-chunk Python loop; same

@@ -17,10 +17,13 @@ readback + rendering.
   3. read the drop-reason tables over the management port (DROP_READ),
   4. read occupancy histograms (HISTO_READ) and print p50/p99,
   5. print the `top`-style panel and write a Chrome/Perfetto trace of
-     the serve path (open diagnose.perfetto.json at ui.perfetto.dev).
+     the serve path (open artifacts/diagnose.perfetto.json at
+     ui.perfetto.dev).
 
 Run:  PYTHONPATH=src python examples/diagnose.py
 """
+import os
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -33,7 +36,7 @@ IP_C, IP_S = F.ip("10.0.0.2"), F.ip("10.0.0.1")
 SERVE_PORT, MGMT_PORT = 9400, 9909
 BLOCK = 4096                    # rs_serve data block: 8 x 512 bytes
 WIDTH = 4400
-OUT = "diagnose.perfetto.json"
+OUT = os.path.join("artifacts", "diagnose.perfetto.json")
 
 
 def rs_frame(req_id, body):
@@ -97,6 +100,7 @@ def main():
 
     print("\n-- 5. the top-style panel + Perfetto export")
     print(export.summary(state, stack.pipeline))
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
     n = export.write_perfetto(OUT, state, stack.pipeline)
     print(f"\n  wrote {n} trace events to {OUT} "
           f"(open at ui.perfetto.dev or chrome://tracing)")

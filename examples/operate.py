@@ -8,7 +8,10 @@ reply frame.
   3. live-rewrite the NAT mapping (migration-style) and keep serving,
   4. drain one echo replica for maintenance, prove dispatch avoids it,
      then restore it,
-  5. poll the version counter to confirm convergence.
+  5. poll the version counter to confirm convergence,
+  6. watch: install an SLO rule on the drop rate, push a loss burst
+     through, catch the device-emitted MSG_ALERT frame, and read the
+     per-window series ring back over the same management port.
 
 Run:  PYTHONPATH=src python examples/operate.py
 """
@@ -19,6 +22,7 @@ from repro.apps import echo
 from repro.mgmt.console import MgmtConsole, dump_counters
 from repro.net import frames as F, rpc
 from repro.net.stack import UdpStack, udp_topology_with_nat
+from repro.obs import collector, slo
 
 IP_C, IP_S = F.ip("10.0.0.2"), F.ip("10.0.0.1")
 VIP, VIP2 = F.ip("20.0.0.9"), F.ip("20.0.0.7")
@@ -40,7 +44,9 @@ def traffic(stack, state, dst_ip, n=4, tag=b"ping"):
 
 def main():
     apps = [echo.make(port=7, n_replicas=2)]
-    stack = UdpStack(apps, IP_S, topo=udp_topology_with_nat(apps),
+    topo = udp_topology_with_nat(apps)
+    slo.bind_watchdog(topo, collector_ip=IP_C)     # in-band SLO alerts
+    stack = UdpStack(apps, IP_S, topo=topo,
                      nat_entries=[(VIP, IP_S)], mgmt_port=MGMT_PORT)
     state = stack.init_state()
     con = MgmtConsole(stack)
@@ -83,6 +89,47 @@ def main():
     state, converged = con.wait_converged(state, 3)
     state, v = con.version(state)
     print(f"  [mgmt] version={v} converged={converged}")
+
+    print("\n-- 6. watch: SLO rule on the ip_rx drop rate")
+    state, ack = con.set_window(state, 1)          # 1 batch per window
+    state, ack = con.set_slo(state, 0, "drops", "ip_rx",
+                             raise_thr=3, clear_thr=1)
+    print(f"  [mgmt] SLO_SET acked: status={ack['status']} "
+          f"(drops@ip_rx raise>=3 clear<=1, window=1 batch)")
+
+    def burst(n, corrupt):
+        out = []
+        for i in range(n):
+            fr = F.udp_rpc_frame(IP_C, VIP2, 6000 + i, 7,
+                                 rpc.np_frame(rpc.MSG_ECHO, i, b"watch"))
+            if corrupt:
+                fr = bytearray(fr)
+                fr[F.l2_offset(bytes(fr)) + 10] ^= 0xFF   # break IP csum
+                fr = bytes(fr)
+            out.append(fr)
+        return out
+
+    batches = [burst(4, False), burst(4, True), burst(4, False)]
+    arena = F.FrameArena(len(batches), 4, 256)
+    arena.fill([f for b in batches for f in b])
+    state, outs = stack.run_stream(state, jnp.asarray(arena.payload),
+                                   jnp.asarray(arena.length))
+    for b in range(len(batches)):
+        fired = np.flatnonzero(np.asarray(outs["alert_valid"])[b])
+        print(f"  [watch] batch {b}: "
+              f"{'ALERT rule ' + str(fired.tolist()) if fired.size else 'ok'}")
+    alerts = [collector.decode_alert(f) for f in collector.harvest(
+        outs["alert_payload"], outs["alert_len"], outs["alert_valid"])]
+    for a in alerts:
+        print(f"  [alert] {a['metric']} node={a['node']} "
+              f"value={a['value']} >= {a['threshold']} "
+              f"(window {a['window']}) — edge-triggered, one per burst")
+
+    state, r = con.read_series(state, "ip_rx", age=0)
+    s = r["series"]
+    print(f"  [series] ip_rx newest window: frames={s['frames']} "
+          f"drops={s['drops']} bytes={s['bytes']} "
+          f"occ_p99_bucket={s['occ_p99']} ({s['windows']} windows closed)")
 
 
 if __name__ == "__main__":

@@ -53,7 +53,7 @@ import jax.numpy as jnp
 from repro.core import deadlock, routing, telemetry
 from repro.core.noc import chain_latency_cycles
 from repro.core.topology import RouteEntry, TileDecl, TopologyConfig
-from repro.obs import flight, reasons
+from repro.obs import flight, postcard, reasons, series, slo
 
 # reference payload for the per-tile NoC latency estimate (the paper's
 # latency measurement uses 64-byte messages)
@@ -399,7 +399,9 @@ class CompiledPipeline:
     batches under one lax.scan."""
 
     # carrier keys worth stacking out of a streamed run (whichever exist)
-    STREAM_OUT_KEYS = ("tx_payload", "tx_len", "alive", "info", "tcp_resps")
+    STREAM_OUT_KEYS = ("tx_payload", "tx_len", "alive", "info", "tcp_resps",
+                       "pc_payload", "pc_len", "pc_valid",
+                       "alert_payload", "alert_len", "alert_valid")
 
     def __init__(self, ingress: str, stages, table_entries=None,
                  pipe_meta=None, pruned=None):
@@ -415,6 +417,20 @@ class CompiledPipeline:
         self._lat_cycles = jnp.asarray(
             [ctx.lat_cycles for _, _, ctx, *_ in self.stages], jnp.int32)
         self._node_idx = jnp.arange(len(self.stages), dtype=jnp.int32)
+        # push-mode observability taps (repro.obs.{postcard,slo}): the
+        # tiles are structural, the executor packs their egress frames
+        local_ip = 0
+        if self.stages:
+            local_ip = int(self.stages[0][2].options.get("local_ip") or 0)
+        self._mirror_cfg = None
+        self._watchdog_cfg = None
+        for node, _, ctx, *_ in self.stages:
+            if node.kind == "int_mirror":
+                self._mirror_cfg = postcard.tile_cfg(
+                    node.members[0].params, local_ip)
+            elif node.kind == "watchdog":
+                self._watchdog_cfg = postcard.tile_cfg(
+                    node.members[0].params, local_ip)
 
     @property
     def order(self) -> List[str]:
@@ -453,6 +469,8 @@ class CompiledPipeline:
             }})
             if with_obs:
                 st["telemetry"]["obs"] = flight.make_obs(len(self.stages))
+                st["telemetry"]["series"] = series.make_series(
+                    len(self.stages))
         # logs served together over LOG_READ are stacked: every log must
         # share one ring depth (tile inits contribute extra logs, e.g.
         # tcp_cc.*, at telemetry.PIPE_LOG_ENTRIES) — reject a mismatch
@@ -497,7 +515,7 @@ class CompiledPipeline:
         if telem is not None:
             src = state["telemetry"]
             telem = {"step": src["step"] + 1, "logs": dict(src["logs"])}
-            for k in ("nodes", "drops"):
+            for k in ("nodes", "drops", "series"):
                 if k in src:
                     telem[k] = src[k]
             if "obs" in src:
@@ -510,6 +528,7 @@ class CompiledPipeline:
         routes_rt = state.get("routes")
         pkts_in: List[jnp.ndarray] = []
         drops: List[jnp.ndarray] = []
+        bytes_l: List[jnp.ndarray] = []
         drop_blocks: List[jnp.ndarray] = []
         enters: List[jnp.ndarray] = []
         exits: List[jnp.ndarray] = []
@@ -538,6 +557,7 @@ class CompiledPipeline:
                     pred = pred | (ok_of[src] & hit)
             carrier = dict(carrier)
             carrier["drop_reason"] = zero_reason   # tiles overwrite per row
+            stage_len = carrier["length"]          # view before the tile
             state, carrier, ok = spec.fn(state, carrier, pred, ctx)
             ok_of[node.name] = pred & ok if ok is not None else pred
             if spec.alive:
@@ -550,6 +570,8 @@ class CompiledPipeline:
             if count_nodes:
                 pkts_in.append(pred.sum(dtype=jnp.int32))
                 drops.append((pred & ~ok_of[node.name]).sum(dtype=jnp.int32))
+                bytes_l.append(jnp.where(pred, stage_len,
+                                         0).sum().astype(jnp.int32))
             if count_drops or obs is not None:
                 # drop attribution: hard drops (arrived & failed) plus
                 # soft drops (tile set a reason but kept the packet alive,
@@ -620,6 +642,87 @@ class CompiledPipeline:
             obs["frame_ctr"] = obs["frame_ctr"] + n
             telem["obs"] = obs
 
+            # ---- push-mode observability (paper-adjacent INT postcards,
+            # series ring, SLO watchdog — repro.obs.{series,postcard,slo})
+            if "series" in telem and count_nodes:
+                # per-stage TCP retransmission totals (tcp_rx row only):
+                # stored cumulatively, so the window delta falls out of
+                # the series' cum-prev subtraction like the other metrics
+                retx_col = jnp.zeros((nstages,), jnp.int32)
+                ccs = state.get("conn")
+                ccs = ccs.get("cc") if isinstance(ccs, dict) else None
+                if ccs is not None and "tcp_rx" in self._index:
+                    total = (ccs["retx_fast"]
+                             + ccs["retx_timer"]).sum().astype(jnp.int32)
+                    retx_col = retx_col.at[self._index["tcp_rx"]].set(total)
+                telem["series"] = series.update(
+                    telem["series"], jnp.stack(pkts_in), jnp.stack(drops),
+                    jnp.stack(bytes_l), retx_col, obs["histo"])
+            if self._mirror_cfg is not None:
+                # one fused pack per batch; validity = the recorder's
+                # sample mask, so the mirror obeys the same runtime
+                # obs_ctrl knobs (TRACE_SET) with no retrace.  lax.cond
+                # skips the pack at runtime for batches with no sampled
+                # frame (the common case at production 1/64 sampling).
+                fb = postcard.frame_bytes(nstages)
+
+                def _pc_pack(_):
+                    pc, pl = postcard.pack(
+                        self._mirror_cfg, carrier.get("meta"),
+                        telem["step"], fid, E, X, V,
+                        flight.bucket_of(occ), first_reason)
+                    return pc, pl.astype(jnp.int32)
+
+                def _pc_skip(_):
+                    return (jnp.zeros((n, fb), jnp.uint8),
+                            jnp.zeros((n,), jnp.int32))
+
+                pc, pclen = jax.lax.cond(sampled.any(), _pc_pack,
+                                         _pc_skip, None)
+                carrier["pc_payload"] = pc
+                carrier["pc_len"] = pclen
+                carrier["pc_valid"] = sampled
+            if self._watchdog_cfg is not None and "slo" in state \
+                    and "series" in telem:
+                # rules only re-evaluate on the batch that closed a
+                # window (wr advanced past the watchdog's last look);
+                # edges are rarer still, so the alert pack nests one
+                # level deeper
+                nr = state["slo"]["active"].shape[0]
+                ab = slo.ALERT_BODY_BYTES + postcard.STACK_BYTES
+                fresh = telem["series"]["wr"] > state["slo"]["last_wr"]
+
+                def _wd_eval(_):
+                    sl, edge, val = slo.evaluate(state["slo"],
+                                                 telem["series"])
+
+                    def _al_pack(_):
+                        ap, al = slo.alert_frames(
+                            self._watchdog_cfg, sl, telem["series"],
+                            edge, val)
+                        return ap, al.astype(jnp.int32)
+
+                    def _al_skip(_):
+                        return (jnp.zeros((nr, ab), jnp.uint8),
+                                jnp.zeros((nr,), jnp.int32))
+
+                    ap, al = jax.lax.cond(edge.any(), _al_pack,
+                                          _al_skip, None)
+                    return sl, edge, ap, al
+
+                def _wd_idle(_):
+                    return (state["slo"],
+                            jnp.zeros((nr,), jnp.bool_),
+                            jnp.zeros((nr, ab), jnp.uint8),
+                            jnp.zeros((nr,), jnp.int32))
+
+                sl, edge, ap, al = jax.lax.cond(fresh, _wd_eval,
+                                                _wd_idle, None)
+                carrier["alert_payload"] = ap
+                carrier["alert_len"] = al
+                carrier["alert_valid"] = edge
+                state["slo"] = sl
+
         # ---- post-batch table commit (management plane) ------------------
         # A management tile stages table writes in the carrier; they are
         # committed here, after every stage has run, so a command always
@@ -652,6 +755,26 @@ class CompiledPipeline:
                 o = dict(telem["obs"])
                 o["ctrl"] = staged["obs_ctrl"]
                 telem["obs"] = o
+            if staged.get("slo") is not None and "slo" in state:
+                # commit rule fields only — the watchdog's own
+                # active/last_wr/alerts updates from this batch's
+                # evaluation must survive the commit.  A rewritten slot
+                # is unlatched (clear_active) so hysteresis restarts
+                # from the new thresholds.
+                su = staged["slo"]
+                s = dict(state["slo"])
+                for k in ("metric", "node", "thr_raise", "thr_clear",
+                          "enabled"):
+                    s[k] = su[k]
+                s["active"] = jnp.where(su["clear_active"] != 0,
+                                        jnp.zeros_like(s["active"]),
+                                        s["active"])
+                state["slo"] = s
+            if staged.get("series_win") is not None and telem is not None \
+                    and "series" in telem:
+                ser = dict(telem["series"])
+                ser["win_len"] = staged["series_win"]
+                telem["series"] = ser
         return state, carrier
 
     # ---- streaming execution (device-resident multi-batch) ---------------

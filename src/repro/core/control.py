@@ -33,9 +33,19 @@ Command encoding (RPC payload, all big-endian u32):
      10 = HISTO_READ     (a=row: node index, or num_nodes for the
                          end-to-end row): one 16-bucket occupancy
                          histogram row, wide-response format
-     11 = DROP_READ      (a=node index): one 16-wide drop-reason count
-                         row (repro.obs.reasons codes), wide-response
-                         format
+     11 = DROP_READ      (a=node index): one drop-reason count row
+                         (repro.obs.reasons codes, NUM_REASONS wide),
+                         wide-response format
+     12 = SLO_SET        (target=rule slot, a=metric_id<<16 | node_index,
+                         b=raise threshold or -1 to disable the slot,
+                         c=clear threshold): install one watchdog rule
+                         over the series ring (repro.obs.slo) — live,
+                         no retrace.  target=-1, b>0 instead sets the
+                         series window length to b batches.
+     13 = SERIES_READ    (target=node index, a=window age; 0 = newest
+                         completed window): one node's per-window
+                         counter deltas from the series ring
+                         (repro.obs.series), wide-response format
 
 Response encoding (RPC payload, all big-endian u32, 8 words fixed):
   [op, version, status, w0, w1, w2, w3, w4]
@@ -49,6 +59,9 @@ Response encoding (RPC payload, all big-endian u32, 8 words fixed):
   served_word_count, OBS_ROW_WORDS table words] (0 = bad row / absent
   table).  Both serve the device tables as of the *previous* batch's
   egress — the same staleness window as LOG_READ.
+  SERIES_READ also uses the wide layout; its served words are
+  [windows_closed, window_len, frames, drops, bytes, occ_p99_bucket,
+  retx] for the requested (window, node) cell block.
 """
 from __future__ import annotations
 
@@ -71,6 +84,8 @@ OP_CC_SET = 8
 OP_TRACE_SET = 9
 OP_HISTO_READ = 10
 OP_DROP_READ = 11
+OP_SLO_SET = 12
+OP_SERIES_READ = 13
 
 CMD_WORDS = 5
 CMD_BYTES = 4 * CMD_WORDS
@@ -80,7 +95,7 @@ ROW_WORDS = 5           # counter-row words served per log entry
 MAX_RANGE = 8           # entries per LOG_READ_RANGE response frame
 RANGE_RESP_WORDS = 3 + ROW_WORDS * MAX_RANGE
 RANGE_RESP_BYTES = 4 * RANGE_RESP_WORDS
-OBS_ROW_WORDS = 16      # HISTO_READ / DROP_READ row width (one table row)
+OBS_ROW_WORDS = 24      # HISTO_READ / DROP_READ / SERIES_READ row width
 OBS_RESP_BYTES = 4 * (3 + OBS_ROW_WORDS)
 
 
@@ -215,6 +230,28 @@ def serve_table_row(table, row_id, want):
     else:
         row = row[:OBS_ROW_WORDS]
     served = jnp.where(ok, OBS_ROW_WORDS, 0)
+    return row, served
+
+
+def serve_series_row(ring, wr, win_len, age, node, want):
+    """Serve one (node, window) cell block of the time-series ring
+    (repro.obs.series) in the wide-response layout.  ``age`` counts back
+    from the newest *completed* window (0 = newest).  Snapshot
+    semantics, same staleness window as HISTO_READ.  Returns
+    ((OBS_ROW_WORDS,) row, served): [windows_closed, window_len,
+    metric deltas...]."""
+    W, N, M = ring.shape
+    written = jnp.minimum(wr, W)
+    ok = (want & (age >= 0) & (age < written)
+          & (node >= 0) & (node < N))
+    slot = jnp.mod(wr - 1 - jnp.clip(age, 0, W - 1), W)
+    cell = ring[slot, jnp.clip(node, 0, N - 1)].astype(jnp.uint32)
+    row = jnp.concatenate([
+        jnp.stack([wr.astype(jnp.uint32), win_len.astype(jnp.uint32)]),
+        cell,
+        jnp.zeros((OBS_ROW_WORDS - 2 - M,), jnp.uint32)])
+    row = jnp.where(ok, row, jnp.zeros_like(row))
+    served = jnp.where(ok, 2 + M, 0)
     return row, served
 
 

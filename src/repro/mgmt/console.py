@@ -57,7 +57,8 @@ def parse_response(frame: bytes) -> Dict:
                 "!5I", frame, body + 12 + 4 * control.ROW_WORDS * k)))
         out["rows"] = rows
         out["row"] = {}
-    elif w[0] in (control.OP_HISTO_READ, control.OP_DROP_READ):
+    elif w[0] in (control.OP_HISTO_READ, control.OP_DROP_READ,
+                  control.OP_SERIES_READ):
         # snapshot table row: status = served word count, then the row
         served = min(w[2], control.OBS_ROW_WORDS)
         out["table_row"] = list(struct.unpack_from(
@@ -244,6 +245,49 @@ class MgmtConsole:
         if r.get("table_row"):
             r["reasons"] = {reasons.name(i): c
                             for i, c in enumerate(r["table_row"]) if c}
+        return state, r
+
+    def set_slo(self, state, slot: int, metric, node, raise_thr: int,
+                clear_thr: Optional[int] = None):
+        """Install one watchdog rule (repro.obs.slo): alert when `metric`
+        at `node` crosses `raise_thr` in a series window, latch until it
+        falls back to `clear_thr` (default: raise/2).  Live next batch,
+        no retrace."""
+        from repro.obs import series as series_mod
+        mid = (series_mod.METRIC_IDS[metric] if isinstance(metric, str)
+               else int(metric))
+        nid = self.node_ids[node] if isinstance(node, str) else int(node)
+        if clear_thr is None:
+            clear_thr = raise_thr // 2
+        state, (r,) = self.roundtrip(state, [
+            (control.OP_SLO_SET, slot, (mid << 16) | nid,
+             int(raise_thr), int(clear_thr))])
+        return state, r
+
+    def clear_slo(self, state, slot: int):
+        """Disable one watchdog rule slot."""
+        state, (r,) = self.roundtrip(state, [
+            (control.OP_SLO_SET, slot, 0, -1, 0)])
+        return state, r
+
+    def set_window(self, state, batches: int):
+        """Set the series window length (batches per window) live."""
+        state, (r,) = self.roundtrip(state, [
+            (control.OP_SLO_SET, -1, 0, int(batches), 0)])
+        return state, r
+
+    def read_series(self, state, tile, age: int = 0):
+        """One node's counter deltas for one completed series window
+        (age 0 = newest).  Served through the previous batch."""
+        from repro.obs import series as series_mod
+        nid = self.node_ids[tile] if isinstance(tile, str) else int(tile)
+        state, (r,) = self.roundtrip(state, [
+            (control.OP_SERIES_READ, nid, age, 0, 0)])
+        tr = r.get("table_row") or []
+        if len(tr) >= 2 + series_mod.NUM_METRICS:
+            r["series"] = {"windows": tr[0], "win_len": tr[1]}
+            for i, m in enumerate(series_mod.METRICS):
+                r["series"][m] = tr[2 + i]
         return state, r
 
     def version(self, state) -> Tuple[Dict, int]:

@@ -207,6 +207,16 @@ def mgmt_tile(state, carrier, pred, ctx):
     cc_ssth0 = cc0["ssthresh"] if has_cc else jnp.zeros((1,), jnp.int32)
     cc_pol0 = cc0["policy"] if has_cc else jnp.zeros((), jnp.int32)
 
+    # push-mode observability: the series ring (snapshot reads) and the
+    # watchdog rule table (staged writes, like every other table)
+    serb = (telem or {}).get("series")
+    has_series = serb is not None
+    ring0 = (serb["ring"] if has_series else jnp.zeros((1, 1, 1), jnp.int32))
+    ser_wr0 = serb["wr"] if has_series else jnp.zeros((), jnp.int32)
+    slo0 = state.get("slo")
+    has_slo = slo0 is not None
+    zr = jnp.zeros((1,), jnp.int32)
+
     ctrlst = state["mgmt"]["ctrl"]
     carry0 = {
         "version": ctrlst.version, "last_op": ctrlst.last_op,
@@ -220,6 +230,15 @@ def mgmt_tile(state, carrier, pred, ctx):
                    else jnp.zeros((), jnp.int32)),
         "obs_shift": (obsb["ctrl"]["shift"] if has_obs
                       else jnp.zeros((), jnp.int32)),
+        "slo_metric": slo0["metric"] if has_slo else zr,
+        "slo_node": slo0["node"] if has_slo else zr,
+        "slo_raise": slo0["thr_raise"] if has_slo else zr,
+        "slo_clear": slo0["thr_clear"] if has_slo else zr,
+        "slo_en": slo0["enabled"] if has_slo else zr,
+        # slots rewritten this batch get unlatched at commit
+        "slo_reset": jnp.zeros_like(slo0["enabled"] if has_slo else zr),
+        "win_len": (serb["win_len"] if has_series
+                    else jnp.zeros((), jnp.int32)),
         # outstanding readbacks were serviced between batches (drain)
         "fills": jnp.zeros((max(n_logs, 1),), jnp.int32),
     }
@@ -314,14 +333,47 @@ def mgmt_tile(state, carrier, pred, ctx):
                            c["obs_en"])
         obs_shift = jnp.where(trace_ok, b, c["obs_shift"])
 
-        # HISTO_READ / DROP_READ — one snapshot table row each, served
-        # in the wide (range-layout) response frame
+        # SLO_SET — install / clear one watchdog rule over the series
+        # ring (target = rule slot; a = metric<<16 | node; b = raise
+        # threshold, -1 disables the slot; c = clear threshold).
+        # target == -1 with b > 0 sets the series window length instead.
+        n_rules = c["slo_metric"].shape[0]
+        is_slo = v & (op == control.OP_SLO_SET)
+        rule_ok = is_slo & has_slo & (target >= 0) & (target < n_rules)
+        ri = jnp.clip(target, 0, n_rules - 1)
+        disable = b == -1
+        met = (a >> 16) & 0xFFFF
+        nod = a & 0xFFFF
+        slo_metric = jnp.where(rule_ok & ~disable,
+                               c["slo_metric"].at[ri].set(met),
+                               c["slo_metric"])
+        slo_node = jnp.where(rule_ok & ~disable,
+                             c["slo_node"].at[ri].set(nod), c["slo_node"])
+        slo_raise = jnp.where(rule_ok & ~disable,
+                              c["slo_raise"].at[ri].set(b), c["slo_raise"])
+        slo_clear = jnp.where(rule_ok & ~disable,
+                              c["slo_clear"].at[ri].set(cc), c["slo_clear"])
+        slo_en = jnp.where(rule_ok,
+                           c["slo_en"].at[ri].set(
+                               jnp.where(disable, 0, 1)), c["slo_en"])
+        slo_reset = jnp.where(rule_ok, c["slo_reset"].at[ri].set(1),
+                              c["slo_reset"])
+        win_ok = is_slo & has_series & (target == -1) & (b > 0)
+        win_len = jnp.where(win_ok, b, c["win_len"])
+        slo_ok = rule_ok | win_ok
+
+        # HISTO_READ / DROP_READ / SERIES_READ — one snapshot table row
+        # each, served in the wide (range-layout) response frame
         want_h = v & (op == control.OP_HISTO_READ) & has_obs
         hrow, hserved = control.serve_table_row(histo0, a, want_h)
         want_d = v & (op == control.OP_DROP_READ) & has_drops
         drow, dserved = control.serve_table_row(drops0, a, want_d)
-        want_obs = want_h | want_d
-        obs_served = jnp.where(want_h, hserved, dserved)
+        want_s = v & (op == control.OP_SERIES_READ) & has_series
+        srow, sserved = control.serve_series_row(
+            ring0, ser_wr0, c["win_len"], a, target, want_s)
+        want_obs = want_h | want_d | want_s
+        obs_served = jnp.where(want_h, hserved,
+                               jnp.where(want_d, dserved, sserved))
 
         # LOG_READ — serve a counter row, REQ_BUF backpressure
         want = v & (op == control.OP_LOG_READ) & (n_logs > 0)
@@ -336,7 +388,7 @@ def mgmt_tile(state, carrier, pred, ctx):
 
         is_ver = v & (op == control.OP_VERSION)
         applied = nat_ok | health_ok | route_ok | rate_ok | cc_ok \
-            | trace_ok
+            | trace_ok | slo_ok
         version = c["version"] + applied.astype(jnp.int32)
         status = (applied | accepted | is_ver).astype(jnp.uint32)
         plain = control.encode_response(w[0], version, status, row)
@@ -345,7 +397,8 @@ def mgmt_tile(state, carrier, pred, ctx):
                               - control.RESP_WORDS,), jnp.uint32)])
         rng = control.encode_range_response(w[0], version, served, rng_rows)
         wide = control.encode_obs_response(
-            w[0], version, obs_served, jnp.where(want_h, hrow, drow))
+            w[0], version, obs_served,
+            jnp.where(want_h, hrow, jnp.where(want_d, drow, srow)))
         resp = jnp.where(want_rng, rng, jnp.where(want_obs, wide, plain))
         blen = jnp.where(
             want_rng,
@@ -362,6 +415,10 @@ def mgmt_tile(state, carrier, pred, ctx):
               "rate": rate,
               "cc_cwnd": cc_cwnd, "cc_ssth": cc_ssth, "cc_pol": cc_pol,
               "obs_en": obs_en, "obs_shift": obs_shift,
+              "slo_metric": slo_metric, "slo_node": slo_node,
+              "slo_raise": slo_raise, "slo_clear": slo_clear,
+              "slo_en": slo_en, "slo_reset": slo_reset,
+              "win_len": win_len,
               "fills": fills}
         return nc, (resp, blen)
 
@@ -421,5 +478,17 @@ def mgmt_tile(state, carrier, pred, ctx):
     if has_obs:
         staged["obs_ctrl"] = {"enable": carry["obs_en"],
                               "shift": carry["obs_shift"]}
+    if has_slo:
+        # rule fields only (+ an unlatch mask for rewritten slots): the
+        # watchdog's own active/last_wr updates happen at egress, after
+        # this tile ran, and must survive the commit
+        staged["slo"] = {"metric": carry["slo_metric"],
+                         "node": carry["slo_node"],
+                         "thr_raise": carry["slo_raise"],
+                         "thr_clear": carry["slo_clear"],
+                         "enabled": carry["slo_en"],
+                         "clear_active": carry["slo_reset"]}
+    if has_series:
+        staged["series_win"] = carry["win_len"]
     carrier["mgmt_staged"] = staged
     return state, carrier, None

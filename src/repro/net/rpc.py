@@ -22,6 +22,8 @@ MSG_VR_COMMIT = 4
 MSG_LM_GENERATE = 5
 MSG_CTRL = 6
 MSG_LM_RELEASE = 7
+MSG_ALERT = 8          # watchdog -> collector: SLO threshold edge
+MSG_POSTCARD = 9       # int_mirror -> collector: per-hop telemetry
 
 
 def parse(payload, length):

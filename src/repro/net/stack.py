@@ -41,7 +41,12 @@ def _bind_or_check_mgmt(topo: TopologyConfig, mgmt_port: int):
     verify the requested port matches the existing binding instead of
     silently black-holing every command sent to the wrong port."""
     if not topo.has_tile("mgmt"):
-        return _mgmt_plane.bind_mgmt(topo, mgmt_port)
+        meta = _mgmt_plane.bind_mgmt(topo, mgmt_port)
+        # a pre-bound watchdog gets its in-band alert endpoint on the
+        # ctrl NoC now that a controller exists (deadlock-analyzed)
+        from repro.obs import slo as _slo
+        _slo.bind_alert_path(topo)
+        return meta
     bound = [r.key for r in topo.tile("udp_rx").routes
              if r.next_tile == "mgmt" and r.match == "udp_port"]
     if mgmt_port not in bound:
@@ -244,11 +249,11 @@ class UdpStack:
         """Streamed rx_tx: N batches (a (N, B, L) frame arena + (N, B)
         lengths) device-resident under one scan — one dispatch, no host
         round trips between batches.  Returns (state', outs) with outs
-        holding stacked ``tx_payload`` / ``tx_len`` / ``alive`` / ``info``.
+        holding stacked ``tx_payload`` / ``tx_len`` / ``alive`` / ``info``
+        (plus the push-observability ``pc_*`` / ``alert_*`` frames when
+        the topology carries an int_mirror / watchdog tile).
         Bit-identical to N sequential :meth:`rx_tx` calls."""
-        state, outs = self.pipeline.run_stream(
-            state, payloads, lengths,
-            out_keys=("tx_payload", "tx_len", "alive", "info"))
+        state, outs = self.pipeline.run_stream(state, payloads, lengths)
         state = dict(state)
         state["rx_count"] = state["rx_count"] + \
             outs["alive"].sum(dtype=jnp.int32)

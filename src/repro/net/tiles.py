@@ -108,6 +108,8 @@ def ipinip_decap(state, carrier, pred, ctx):
     p, l, ok = ipinip.decap(carrier["payload"], carrier["length"],
                             carrier["meta"])
     carrier.update(payload=p, length=l)
+    carrier["drop_reason"] = jnp.where(
+        pred & ~ok, reasons.IPIP_BAD, 0).astype(jnp.int32)
     return state, carrier, ok
 
 
@@ -261,6 +263,42 @@ def eth_tx(state, carrier, pred, ctx):
     mtx["eth_src_hi"], mtx["eth_src_lo"] = m["eth_dst_hi"], m["eth_dst_lo"]
     q, ql = eth.build(carrier["tx_payload"], carrier["tx_len"], mtx)
     carrier.update(tx_payload=q, tx_len=ql)
+    return state, carrier, None
+
+
+# ---------------------------------------------------------------------------
+# push-mode observability tiles (repro.obs.{postcard,series,slo})
+#
+# Both are *egress taps*: the tile functions are structural (the postcard
+# pack and the watchdog evaluation need the cross-stage enter/exit/visit
+# arrays, which only exist once every stage has run, so the executor does
+# the work at batch egress — see CompiledPipeline.run).  Registering them
+# as real tiles puts them in the route graph, the NoC placement, and the
+# deadlock analysis, exactly like the paper's compile-time checks for any
+# other element.
+
+
+@register_tile("int_mirror")
+def int_mirror(state, carrier, pred, ctx):
+    """Postcard mirror behind eth_tx: for frames selected by the flight
+    recorder's runtime sampling knobs, one extra egress frame per sampled
+    packet carries the per-hop TLVs to the collector (the executor packs
+    ``pc_payload``/``pc_len``/``pc_valid`` at batch egress)."""
+    return state, carrier, None
+
+
+def _watchdog_init(ctx):
+    from repro.obs import slo
+    p = (ctx.members[0].params or {})
+    return {"slo": slo.make_rules(int(p.get("rules", slo.NUM_RULES)))}
+
+
+@register_tile("watchdog", init=_watchdog_init)
+def watchdog(state, carrier, pred, ctx):
+    """SLO watchdog behind eth_tx: threshold rules over the series ring
+    (``state["slo"]``, set live via OP_SLO_SET) are evaluated by the
+    executor at batch egress; alert frames land in
+    ``alert_payload``/``alert_len``/``alert_valid``."""
     return state, carrier, None
 
 

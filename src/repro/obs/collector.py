@@ -1,0 +1,155 @@
+"""Host-side postcard/alert collector.
+
+The device pushes two kinds of frames at egress (see
+:mod:`repro.obs.postcard` and :mod:`repro.obs.slo` for the wire
+formats): per-sampled-frame telemetry postcards and edge-triggered SLO
+alerts.  This module is the receive side an operator would run next to
+the NIC: decode the frames, reassemble per-flow per-hop paths, and merge
+the postcard slices into the same Chrome/Perfetto trace-event stream the
+pull-side exporter (:mod:`repro.obs.export`) produces — one combined
+timeline from both halves.
+"""
+from __future__ import annotations
+
+import json
+import struct
+from typing import Dict, List, Optional, Sequence
+
+from repro.net import rpc
+from repro.obs import export, postcard, reasons, series
+
+ETH_HLEN, IP_HLEN, UDP_HLEN = 14, 20, 8
+
+
+def _rpc_body(frame: bytes, msg_type: int, dst_port: Optional[int] = None):
+    """Strip Eth/IPv4/UDP/RPC; return (body, req_id) or None."""
+    rpc_off = ETH_HLEN + IP_HLEN + UDP_HLEN
+    if len(frame) < rpc_off + rpc.HLEN:
+        return None
+    if dst_port is not None:
+        (dport,) = struct.unpack_from("!H", frame, ETH_HLEN + IP_HLEN + 2)
+        if dport != dst_port:
+            return None
+    magic, mt, req_id, plen = struct.unpack_from("!HBIH", frame, rpc_off)
+    if magic != rpc.MAGIC or mt != msg_type:
+        return None
+    body = frame[rpc_off + rpc.HLEN: rpc_off + rpc.HLEN + plen]
+    if len(body) < plen:
+        return None
+    return body, req_id
+
+
+def decode_postcard(frame: bytes) -> Optional[Dict]:
+    """One postcard frame -> dict, or None if it isn't one."""
+    got = _rpc_body(frame, rpc.MSG_POSTCARD)
+    if got is None:
+        return None
+    body, _ = got
+    if len(body) < postcard.HDR_BYTES or body[0] != postcard.VERSION:
+        return None
+    nhops = body[1]
+    if len(body) < postcard.body_bytes(nhops):
+        return None
+    fid, step, sip, dip, sport, dport = struct.unpack_from("!IIIIHH", body, 4)
+    hops = []
+    for i in range(nhops):
+        off = postcard.HDR_BYTES + postcard.HOP_BYTES * i
+        stage, visited, occb = body[off], body[off + 1], body[off + 2]
+        enter, exit_ = struct.unpack_from("!II", body, off + 4)
+        hops.append({"stage": stage, "visited": bool(visited),
+                     "occ_bucket": occb, "enter": enter, "exit": exit_})
+    return {"frame_id": fid, "step": step,
+            "flow": (sip, dip, sport, dport),
+            "first_reason": body[2], "dropped": bool(body[3] & 1),
+            "hops": hops}
+
+
+def decode_alert(frame: bytes) -> Optional[Dict]:
+    """One MSG_ALERT frame -> dict, or None if it isn't one."""
+    got = _rpc_body(frame, rpc.MSG_ALERT)
+    if got is None:
+        return None
+    body, _ = got
+    if len(body) < 16 or body[0] != postcard.VERSION:
+        return None
+    value, thr, window = struct.unpack_from("!III", body, 4)
+    mi = body[2]
+    return {"rule": body[1],
+            "metric": series.METRICS[mi] if mi < len(series.METRICS)
+            else mi,
+            "node": body[3], "value": value, "threshold": thr,
+            "window": window}
+
+
+def harvest(payloads, lengths, valid) -> List[bytes]:
+    """Pull the valid frames out of stacked (..., B, W) egress arrays
+    (e.g. the ``pc_*`` / ``alert_*`` outs of ``run_stream``)."""
+    import numpy as np
+    p = np.asarray(payloads).reshape(-1, payloads.shape[-1])
+    l = np.asarray(lengths).reshape(-1)
+    v = np.asarray(valid).reshape(-1)
+    return [bytes(p[i, :l[i]].astype(np.uint8)) for i in range(p.shape[0])
+            if v[i]]
+
+
+def flow_paths(cards: Sequence[Dict],
+               order: Sequence[str]) -> Dict[tuple, List[Dict]]:
+    """Group decoded postcards into per-flow hop paths: {flow: [{frame_id,
+    path (visited stage names), first_reason, dropped}, ...]}."""
+    out: Dict[tuple, List[Dict]] = {}
+    for c in cards:
+        path = [order[h["stage"]] if h["stage"] < len(order)
+                else f"node{h['stage']}"
+                for h in c["hops"] if h["visited"]]
+        out.setdefault(c["flow"], []).append({
+            "frame_id": c["frame_id"], "path": path,
+            "first_reason": reasons.name(c["first_reason"]),
+            "dropped": c["dropped"]})
+    return out
+
+
+def to_trace_events(cards: Sequence[Dict],
+                    order: Sequence[str]) -> List[Dict]:
+    """Postcards as Chrome trace-event slices, same shape as the pull
+    exporter's (pid 1 = the postcard collector, tid = frame id)."""
+    events: List[Dict] = []
+    seen = set()
+    for c in cards:
+        tid = c["frame_id"]
+        if tid not in seen:
+            seen.add(tid)
+            sip, dip, sp, dp = c["flow"]
+            label = f"frame {tid} flow {sip:#x}:{sp}->{dip:#x}:{dp}"
+            if c["first_reason"]:
+                label += f" [{reasons.name(c['first_reason'])}]"
+            events.append({"ph": "M", "name": "thread_name", "pid": 1,
+                           "tid": tid, "args": {"name": label}})
+        for h in c["hops"]:
+            if not h["visited"]:
+                continue
+            i = h["stage"]
+            events.append({
+                "ph": "X", "pid": 1, "tid": tid,
+                "name": order[i] if i < len(order) else f"node{i}",
+                "ts": h["enter"], "dur": h["exit"] - h["enter"],
+                "args": {"step": c["step"],
+                         "occ_bucket": h["occ_bucket"]},
+            })
+    return events
+
+
+def write_perfetto(path: str, cards: Sequence[Dict], order: Sequence[str],
+                   state=None, pipeline=None) -> int:
+    """Write postcards (and, when a state/pipeline is given, the pull-side
+    flight recorder too) as one combined Perfetto trace."""
+    events = [{"ph": "M", "name": "process_name", "pid": 1,
+               "args": {"name": "beehive-postcards"}}]
+    events += to_trace_events(cards, order)
+    if state is not None and pipeline is not None:
+        events.append({"ph": "M", "name": "process_name", "pid": 0,
+                       "args": {"name": "beehive-pipeline"}})
+        events += export.to_trace_events(state["telemetry"]["obs"],
+                                         pipeline.order)
+    with open(path, "w") as f:
+        json.dump({"traceEvents": events, "displayTimeUnit": "ns"}, f)
+    return len(events)

@@ -1,0 +1,94 @@
+"""Static reason-coverage check: every tile that can squash packets must
+attribute a drop reason.
+
+The drop table (:mod:`repro.obs.reasons`) is only total if every tile
+that can return a non-None ``ok`` mask — i.e. can veto packets — also
+writes ``carrier["drop_reason"]``.  A future tile that forgets leaves
+its drops attributed to ``unspec``, which silently degrades the push
+pipeline (postcard ``first_reason``, series drop rates, watchdog rules
+keyed on them).  This check walks the registered tile functions'
+*source* (AST — no tracing) and fails with the offender list, so the
+gap is caught by ``make lint-reasons`` / the test suite, not by an
+operator staring at ``unspec`` counts.
+
+A tile "can squash" when any top-level ``return`` statement's third
+tuple element is not the literal ``None`` (nested defs, e.g. helper
+closures, are ignored).  It "attributes" when the token
+``drop_reason`` appears in its source.
+"""
+from __future__ import annotations
+
+import ast
+import inspect
+import textwrap
+from typing import List
+
+
+def _top_level_returns(fn) -> List[ast.Return]:
+    src = textwrap.dedent(inspect.getsource(fn))
+    fdef = ast.parse(src).body[0]
+    if not isinstance(fdef, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return []
+    outer: List[ast.Return] = []
+
+    def walk(node):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue                     # helper closures don't count
+            if isinstance(child, ast.Return):
+                outer.append(child)
+            walk(child)
+
+    walk(fdef)
+    return outer
+
+
+def _can_squash(fn) -> bool:
+    """True if any top-level return's ok element is not literal None."""
+    for ret in _top_level_returns(fn):
+        v = ret.value
+        if isinstance(v, ast.Tuple) and len(v.elts) == 3:
+            ok = v.elts[2]
+            if isinstance(ok, ast.Constant) and ok.value is None:
+                continue
+            return True
+        elif v is not None:
+            return True                      # non-tuple return: be strict
+    return False
+
+
+def check_reason_coverage() -> List[str]:
+    """Offending tile kinds: can squash but never touch drop_reason.
+    Imports the standard tile modules first so the registry is full."""
+    import repro.mgmt.plane    # noqa: F401  (registers mgmt tiles)
+    import repro.net.tiles     # noqa: F401  (registers protocol tiles)
+    from repro.core.compiler import TILE_REGISTRY
+
+    bad = []
+    for kind in sorted(TILE_REGISTRY):
+        fn = TILE_REGISTRY[kind].fn
+        try:
+            squashes = _can_squash(fn)
+            src = textwrap.dedent(inspect.getsource(fn))
+        except (OSError, TypeError, SyntaxError):
+            continue                         # no source (builtin/dynamic)
+        if squashes and "drop_reason" not in src:
+            bad.append(kind)
+    return bad
+
+
+def main() -> int:
+    bad = check_reason_coverage()
+    if bad:
+        print("reason-coverage FAILED — tiles that can squash pred but "
+              "never set carrier['drop_reason']:")
+        for k in bad:
+            print(f"  {k}")
+        return 1
+    print("reason-coverage OK: every squashing tile attributes a reason")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,169 @@
+"""In-band telemetry postcards (INT "postcard mode", PAPERS.md: The
+Programmable Data Plane; FlexiNS header-stamping offload).
+
+For every frame selected by the *existing* flight-recorder sampling knobs
+(``obs_ctrl`` — runtime state, no retrace), the executor emits one extra
+egress frame: a UDP datagram to a collector carrying a flow digest plus
+one fixed-size TLV per pipeline stage, harvested from the same
+enter/exit/visit arrays the recorder already computes.  The whole batch
+is packed in one fused sequence of static-offset stores at egress —
+fixed shapes, zero host callbacks.
+
+Wire format (RPC body, ``MSG_POSTCARD``):
+
+    off  size  field
+    0    1     version (=1)
+    1    1     nhops (= num pipeline stages)
+    2    1     first drop reason code (repro.obs.reasons)
+    3    1     flags (bit0: frame was dropped in-pipeline)
+    4    4     frame id (recorder frame counter)
+    8    4     step (batch counter at egress)
+    12   4     src ip        }
+    16   4     dst ip        }  flow digest (RX orientation)
+    20   2     src port      }
+    22   2     dst port      }
+    24   12*i  hop TLV i: [stage u8][visited u8][occ_bucket u8][rsv u8]
+                          [enter_cycles u32][exit_cycles u32]
+
+The postcard rides the normal egress path: RPC -> UDP -> IPv4 -> Eth,
+addressed to the ``int_mirror`` tile's collector params.  Host-side
+decode lives in :mod:`repro.obs.collector`.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.net import eth, ipv4, rpc, udp
+
+VERSION = 1
+HDR_BYTES = 24
+HOP_BYTES = 12
+STACK_BYTES = eth.ETH_HLEN + ipv4.IP_HLEN + udp.UDP_HLEN + rpc.HLEN  # 51
+
+DEFAULT_COLLECTOR_PORT = 9966
+DEFAULT_ALERT_PORT = 9967
+DEFAULT_SRC_PORT = 9965
+# locally-administered MACs for the mirror port and the collector
+DEFAULT_SRC_MAC = (0x02BEE500, 0x0001)
+DEFAULT_DST_MAC = (0x02BEE500, 0x00C0)
+
+
+def body_bytes(num_nodes: int) -> int:
+    return HDR_BYTES + HOP_BYTES * num_nodes
+
+
+def frame_bytes(num_nodes: int) -> int:
+    return body_bytes(num_nodes) + STACK_BYTES
+
+
+def egress_frame(body, blen, msg_type, req_id, cfg):
+    """Wrap an RPC body into a full Eth/IPv4/UDP frame to the collector.
+
+    body: (B, W) uint8 with W >= blen + STACK_BYTES headroom.  cfg is the
+    mirror/watchdog tile param dict (collector_ip/port, src_ip/port,
+    MACs).  Returns (frames, lengths).
+    """
+    n = body.shape[0]
+    u32 = lambda v: jnp.full((n,), v, jnp.uint32)
+    out, ln = rpc.build(body, blen, msg_type, req_id)
+    meta = {"src_port": u32(cfg["src_port"]),
+            "dst_port": u32(cfg["collector_port"]),
+            "src_ip": u32(cfg["src_ip"]),
+            "dst_ip": u32(cfg["collector_ip"]),
+            "ip_proto": u32(ipv4.PROTO_UDP)}
+    out, ln = udp.build(out, ln, meta)
+    out, ln = ipv4.build(out, ln, meta)
+    emeta = {"eth_src_hi": u32(cfg["eth_src_hi"]),
+             "eth_src_lo": u32(cfg["eth_src_lo"]),
+             "eth_dst_hi": u32(cfg["eth_dst_hi"]),
+             "eth_dst_lo": u32(cfg["eth_dst_lo"]),
+             "ethertype": u32(eth.ETHERTYPE_IPV4)}
+    out, ln = eth.build(out, ln, emeta)
+    return out, ln
+
+
+def tile_cfg(params, local_ip=0):
+    """Normalise int_mirror/watchdog tile params into an egress config."""
+    p = params or {}
+    return {
+        "collector_ip": int(p.get("collector_ip", 0)),
+        "collector_port": int(p.get("collector_port", DEFAULT_COLLECTOR_PORT)),
+        "src_ip": int(p.get("src_ip", local_ip)),
+        "src_port": int(p.get("src_port", DEFAULT_SRC_PORT)),
+        "eth_src_hi": int(p.get("eth_src_hi", DEFAULT_SRC_MAC[0])),
+        "eth_src_lo": int(p.get("eth_src_lo", DEFAULT_SRC_MAC[1])),
+        "eth_dst_hi": int(p.get("eth_dst_hi", DEFAULT_DST_MAC[0])),
+        "eth_dst_lo": int(p.get("eth_dst_lo", DEFAULT_DST_MAC[1])),
+    }
+
+
+def _be16b(a):
+    """(...,) -> (..., 2) big-endian uint8 bytes."""
+    a = a.astype(jnp.uint32)
+    return jnp.stack([a >> 8, a], axis=-1).astype(jnp.uint8)
+
+
+def _be32b(a):
+    """(...,) -> (..., 4) big-endian uint8 bytes."""
+    a = a.astype(jnp.uint32)
+    return jnp.stack([a >> 24, a >> 16, a >> 8, a], axis=-1).astype(jnp.uint8)
+
+
+def pack(cfg, meta, step, fid, enters, exits, visits, occ_bucket,
+         first_reason):
+    """One fused pack: (B,) frame batch -> (B, frame_bytes) postcards.
+
+    enters/exits/visits/occ_bucket: (B, num_nodes); first_reason: (B,).
+    meta is the carrier meta dict at egress (RX-oriented flow fields may
+    be absent on non-IP pipelines — they default to 0).  The whole body
+    is assembled as one concatenation of byte planes — no per-field
+    scatter, so the per-batch cost is a handful of fused ops.
+    """
+    n, num_nodes = enters.shape
+    bb = body_bytes(num_nodes)
+    z = jnp.zeros((n,), jnp.uint32)
+    g = lambda k: meta.get(k, z).astype(jnp.uint32) if meta else z
+    fr = first_reason.astype(jnp.uint32)
+
+    hdr = jnp.concatenate([
+        jnp.full((n, 1), VERSION, jnp.uint8),
+        jnp.full((n, 1), num_nodes, jnp.uint8),
+        fr[:, None].astype(jnp.uint8),
+        (fr > 0)[:, None].astype(jnp.uint8),
+        _be32b(fid), _be32b(jnp.broadcast_to(step, (n,))),
+        _be32b(g("src_ip")), _be32b(g("dst_ip")),
+        _be16b(g("src_port")), _be16b(g("dst_port")),
+    ], axis=1)                                        # (n, HDR_BYTES)
+    stage = jnp.broadcast_to(jnp.arange(num_nodes, dtype=jnp.uint8),
+                             (n, num_nodes))
+    tlv = jnp.concatenate([
+        stage[..., None],
+        visits[..., None].astype(jnp.uint8),
+        occ_bucket[..., None].astype(jnp.uint8),
+        jnp.zeros((n, num_nodes, 1), jnp.uint8),
+        _be32b(enters), _be32b(exits),
+    ], axis=-1).reshape(n, num_nodes * HOP_BYTES)
+    body = jnp.concatenate(
+        [hdr, tlv, jnp.zeros((n, STACK_BYTES), jnp.uint8)], axis=1)
+
+    blen = jnp.full((n,), bb, jnp.int32)
+    return egress_frame(body, blen, rpc.MSG_POSTCARD,
+                        fid.astype(jnp.uint32), cfg)
+
+
+def bind_mirror(topo, collector_ip, collector_port=DEFAULT_COLLECTOR_PORT,
+                **params):
+    """Add the `int_mirror` tile to a topology, fed from eth_tx.
+
+    Widens the mesh by one column and declares the mirror's egress chain
+    so the extra postcard traffic participates in deadlock analysis.
+    """
+    base_x = topo.dim_x
+    topo.dim_x = base_x + 1
+    p = dict(params)
+    p["collector_ip"] = collector_ip
+    p["collector_port"] = collector_port
+    topo.add_tile("int_mirror", "int_mirror", base_x, 1, params=p)
+    topo.add_route("eth_tx", "const", None, "int_mirror")
+    topo.add_chain("eth_tx", "int_mirror")
+    return "int_mirror"

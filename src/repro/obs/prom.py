@@ -1,0 +1,67 @@
+"""Prometheus text exposition of the device-resident series ring.
+
+Renders the newest completed windows of ``telemetry["series"]`` (plus
+the rule table, when present) in the Prometheus text format — the host
+half of the push pipeline an operator would mount behind ``/metrics``.
+Rates are per *window* (``win_len`` batches); the window length is
+exported too so a scraper can normalise to per-second.
+
+No device computation: one ``np.asarray`` per table at entry.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.obs import series
+
+_HELP = {
+    "frames": "frames entering the stage per window",
+    "drops": "frames dropped at the stage per window",
+    "bytes": "payload bytes entering the stage per window",
+    "occ_p99": "occupancy p99 power-of-two bucket index per window",
+    "retx": "TCP retransmissions per window",
+}
+
+
+def _fmt(name: str, labels: Dict[str, object], value) -> str:
+    lbl = ",".join(f'{k}="{v}"' for k, v in labels.items())
+    return f"beehive_{name}{{{lbl}}} {int(value)}"
+
+
+def render(ser: Dict, order: Sequence[str], slo=None,
+           windows: int = 1) -> str:
+    """Text exposition of the last `windows` completed windows."""
+    lines: List[str] = []
+    rows = series.series_rows(ser)[-max(1, windows):]
+    lines.append(f"# HELP beehive_window_len_batches batches per "
+                 f"series window")
+    lines.append("# TYPE beehive_window_len_batches gauge")
+    lines.append(_fmt("window_len_batches", {}, int(ser["win_len"])))
+    for mi, mname in enumerate(series.METRICS):
+        lines.append(f"# HELP beehive_window_{mname} {_HELP[mname]}")
+        lines.append(f"# TYPE beehive_window_{mname} gauge")
+        for w, row in rows:
+            row = np.asarray(row)
+            for ni in range(row.shape[0]):
+                node = order[ni] if ni < len(order) else f"node{ni}"
+                lines.append(_fmt(f"window_{mname}",
+                                  {"node": node, "window": w},
+                                  row[ni, mi]))
+    if slo is not None:
+        active = np.asarray(slo["active"])
+        lines.append("# HELP beehive_slo_active rule is currently latched")
+        lines.append("# TYPE beehive_slo_active gauge")
+        for r in range(active.shape[0]):
+            lines.append(_fmt("slo_active", {"rule": r}, active[r]))
+        lines.append("# HELP beehive_slo_alerts_total alert edges emitted")
+        lines.append("# TYPE beehive_slo_alerts_total counter")
+        lines.append(_fmt("slo_alerts_total", {}, int(slo["alerts"])))
+    return "\n".join(lines) + "\n"
+
+
+def render_state(state: Dict, pipeline, windows: int = 1) -> str:
+    """Convenience wrapper over a full stack state."""
+    return render(state["telemetry"]["series"], pipeline.order,
+                  slo=state.get("slo"), windows=windows)

@@ -49,7 +49,10 @@ APP_BAD_REQ = 13       # malformed / truncated / too-narrow request
 APP_NO_SESSION = 14    # unknown session id
 APP_NO_SLOT = 15       # session table full / session out of room
 
-NUM_REASONS = 16       # fixed table width (wire format; room to grow)
+# ipinip_decap
+IPIP_BAD = 16          # outer header not a decapsulatable IP-in-IP frame
+
+NUM_REASONS = 24       # fixed table width (wire format; room to grow)
 
 NAMES = {
     NONE: "none", UNSPEC: "unspec",
@@ -60,6 +63,7 @@ NAMES = {
     TCP_NO_CONN: "tcp_no_conn",
     APP_BAD_REQ: "app_bad_req", APP_NO_SESSION: "app_no_session",
     APP_NO_SLOT: "app_no_slot",
+    IPIP_BAD: "ipip_bad",
 }
 
 

@@ -1,0 +1,126 @@
+"""Device-resident time-series ring: per-window counter *deltas*.
+
+PR 7's telemetry tables are cumulative totals — fine for a post-mortem,
+useless for "is the drop *rate* spiking right now".  This module keeps a
+small ring of per-window deltas directly in the ``run_stream`` carry:
+
+    ring : (NUM_WINDOWS, num_nodes, NUM_METRICS) int32
+
+Metrics per node per window:
+
+    M_FRAMES  frames entering the stage this window
+    M_DROPS   frames dropped at the stage this window
+    M_BYTES   payload bytes entering the stage this window
+    M_P99     occupancy p99 *bucket index* over this window's histogram
+              delta (power-of-two buckets, see :mod:`repro.obs.flight`)
+    M_RETX    TCP retransmissions this window (tcp_rx rows only)
+
+A "window" is ``win_len`` batches; ``win_len`` is runtime state (set via
+``OP_SLO_SET`` with target=-1) so the cadence can be retuned live, no
+retrace.  One :func:`update` call per batch does the whole job: add this
+batch's per-stage sums into ``cum``, and — when the window closes — one
+subtraction (``cum - prev``) plus one scatter into the ring.
+
+Everything here runs inside the scan: fixed shapes, no host callbacks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs import flight
+
+NUM_WINDOWS = 64
+M_FRAMES, M_DROPS, M_BYTES, M_P99, M_RETX = range(5)
+NUM_METRICS = 5
+METRICS = ("frames", "drops", "bytes", "occ_p99", "retx")
+METRIC_IDS = {n: i for i, n in enumerate(METRICS)}
+DEFAULT_WIN = 8                 # batches per window (runtime-tunable)
+
+
+def make_series(num_nodes: int, windows: int = NUM_WINDOWS):
+    """Fresh series state (device arrays, lives in telemetry["series"])."""
+    return {
+        "win_len": jnp.asarray(DEFAULT_WIN, jnp.int32),   # runtime knob
+        "win_ctr": jnp.asarray(0, jnp.int32),             # batches so far
+        "wr": jnp.asarray(0, jnp.int32),                  # windows closed
+        "ring": jnp.zeros((windows, num_nodes, NUM_METRICS), jnp.int32),
+        "cum": jnp.zeros((num_nodes, NUM_METRICS), jnp.int32),
+        "prev": jnp.zeros((num_nodes, NUM_METRICS), jnp.int32),
+        "hprev": jnp.zeros((num_nodes + 1, flight.NUM_BUCKETS), jnp.int32),
+    }
+
+
+def p99_bucket(hdelta):
+    """Per-row p99 bucket index of a (rows, NUM_BUCKETS) histogram delta.
+
+    Smallest bucket b with cumsum(b) >= 0.99 * total; 0 for empty rows.
+    """
+    cum = jnp.cumsum(hdelta, axis=1)
+    total = cum[:, -1:]
+    ge = cum.astype(jnp.float32) >= 0.99 * total.astype(jnp.float32)
+    idx = jnp.argmax(ge, axis=1).astype(jnp.int32)
+    return jnp.where(total[:, 0] > 0, idx, 0)
+
+
+def update(series, frames, drops, bytes_, retx, histo):
+    """One per-batch step: accumulate, and close a window when due.
+
+    frames/drops/bytes_/retx: (num_nodes,) int32 per-stage sums for this
+    batch (retx is cumulative — deltas fall out of the cum-prev
+    subtraction like everything else).  histo: the *cumulative*
+    (num_nodes+1, NUM_BUCKETS) occupancy histogram after this batch.
+    """
+    ser = dict(series)
+    add = jnp.stack([frames, drops, bytes_,
+                     jnp.zeros_like(frames), retx], axis=1)
+    cum = ser["cum"] + add.astype(jnp.int32)
+    # retx arrives as a cumulative total, not a per-batch increment:
+    # store it absolutely so cum-prev still yields the window delta.
+    cum = cum.at[:, M_RETX].set(retx.astype(jnp.int32))
+
+    ctr = ser["win_ctr"] + 1
+    close = ctr >= ser["win_len"]
+
+    # the close path (p99 reduction, ring scatter, snapshots) only runs
+    # on the 1-in-win_len batch that actually closes a window
+    def _close(_):
+        row = cum - ser["prev"]
+        hdelta = (histo - ser["hprev"])[: row.shape[0]]
+        row = row.at[:, M_P99].set(p99_bucket(hdelta))
+        slot = jnp.mod(ser["wr"], ser["ring"].shape[0])
+        return ser["ring"].at[slot].set(row), cum, histo
+
+    def _skip(_):
+        return ser["ring"], ser["prev"], ser["hprev"]
+
+    ring, prev, hprev = jax.lax.cond(close, _close, _skip, None)
+    ser["cum"] = cum
+    ser["ring"] = ring
+    ser["wr"] = ser["wr"] + close.astype(jnp.int32)
+    ser["win_ctr"] = jnp.where(close, jnp.zeros_like(ctr), ctr)
+    ser["prev"] = prev
+    ser["hprev"] = hprev
+    return ser
+
+
+# ---------------------------------------------------------------- host side
+
+def series_rows(series):
+    """Decode the ring oldest-first -> list of (window_idx, ndarray row)."""
+    ring = np.asarray(series["ring"])
+    wr = int(series["wr"])
+    depth = ring.shape[0]
+    n = min(wr, depth)
+    out = []
+    for age in range(n - 1, -1, -1):
+        w = wr - 1 - age
+        out.append((w, ring[w % depth]))
+    return out
+
+
+def last_window(series):
+    """Newest completed window as (window_idx, (num_nodes, M) ndarray)."""
+    rows = series_rows(series)
+    return rows[-1] if rows else (None, None)

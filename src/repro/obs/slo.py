@@ -1,0 +1,132 @@
+"""On-device SLO watchdog: threshold rules over the series ring, alerts
+pushed in-band.
+
+Rules live in ``state["slo"]`` (fixed-shape arrays — runtime state, set
+live via the ``OP_SLO_SET`` management op, no retrace).  Each rule
+watches one ``(node, metric)`` cell of the newest completed time-series
+window (:mod:`repro.obs.series`) with two thresholds:
+
+    thr_raise   window value >= thr_raise  -> rule becomes active
+    thr_clear   window value <= thr_clear  -> rule deactivates
+
+Alerts are *edge-triggered with hysteresis*: an ``MSG_ALERT`` frame is
+emitted only on the inactive->active transition, and the rule stays
+latched until the value falls to ``thr_clear`` — a 40-window burst
+produces one alert, not forty.  Evaluation happens at batch egress
+inside the scan (one gather + compares per rule slot); the alert frames
+ride the normal egress path like postcards, so the push direction needs
+no host callback either.
+
+Alert wire format (RPC body, ``MSG_ALERT``):
+
+    off  size  field
+    0    1     version (=1)
+    1    1     rule slot index
+    2    1     metric id (repro.obs.series.METRICS)
+    3    1     node index
+    4    4     window value that crossed the threshold
+    8    4     thr_raise at evaluation time
+    12   4     series window index (req_id repeats it)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.net import bytesops as B, rpc
+from repro.obs import postcard
+
+NUM_RULES = 8
+ALERT_BODY_BYTES = 16
+
+
+def make_rules(num_rules: int = NUM_RULES):
+    """Fresh rule table (device arrays, lives in state["slo"])."""
+    z = lambda: jnp.zeros((num_rules,), jnp.int32)
+    return {"metric": z(), "node": z(),
+            "thr_raise": z(), "thr_clear": z(),
+            "enabled": z(), "active": z(),
+            "last_wr": jnp.asarray(0, jnp.int32),
+            "alerts": jnp.asarray(0, jnp.int32)}
+
+
+def evaluate(slo_state, ser):
+    """One per-batch step: (slo', edge, value).
+
+    Only does real work when a new window closed since the last look
+    (``ser["wr"]`` advanced); otherwise rule state passes through
+    unchanged and ``edge`` is all-False.
+    """
+    s = dict(slo_state)
+    ring, wr = ser["ring"], ser["wr"]
+    W, N, M = ring.shape
+    fresh = wr > s["last_wr"]
+    row = ring[jnp.mod(wr - 1, W)]                       # newest window
+    val = row[jnp.clip(s["node"], 0, N - 1),
+              jnp.clip(s["metric"], 0, M - 1)]
+    en = (s["enabled"] != 0) & (wr > 0)
+    breach = val >= s["thr_raise"]
+    clear_ok = val <= s["thr_clear"]
+    was = s["active"] != 0
+    now = jnp.where(fresh, breach | (was & ~clear_ok), was) & en
+    edge = fresh & now & ~was
+    s["active"] = now.astype(jnp.int32)
+    s["last_wr"] = jnp.maximum(s["last_wr"], wr)
+    s["alerts"] = s["alerts"] + edge.sum(dtype=jnp.int32)
+    return s, edge, val
+
+
+def alert_frames(cfg, slo_state, ser, edge, val):
+    """Pack the rule table into (R,) MSG_ALERT frames; ``edge`` is the
+    per-slot validity mask (only edges are real alerts)."""
+    R = edge.shape[0]
+    body = jnp.zeros((R, ALERT_BODY_BYTES + postcard.STACK_BYTES), jnp.uint8)
+    u = lambda x: x.astype(jnp.uint32)
+    win = jnp.broadcast_to(jnp.maximum(ser["wr"] - 1, 0), (R,))
+    body = B.set_u8(body, 0, jnp.full((R,), postcard.VERSION, jnp.uint32))
+    body = B.set_u8(body, 1, jnp.arange(R, dtype=jnp.uint32))
+    body = B.set_u8(body, 2, u(slo_state["metric"]))
+    body = B.set_u8(body, 3, u(slo_state["node"]))
+    body = B.set_be32(body, 4, u(val))
+    body = B.set_be32(body, 8, u(slo_state["thr_raise"]))
+    body = B.set_be32(body, 12, u(win))
+    blen = jnp.full((R,), ALERT_BODY_BYTES, jnp.int32)
+    return postcard.egress_frame(body, blen, rpc.MSG_ALERT, u(win), cfg)
+
+
+def bind_watchdog(topo, collector_ip=0,
+                  collector_port=postcard.DEFAULT_ALERT_PORT,
+                  rules: int = NUM_RULES, **params):
+    """Add the `watchdog` tile to a topology, fed from eth_tx.
+
+    Widens the mesh by one column.  The data-NoC chain models the alert
+    egress; if the topology already carries a ctrl NoC (bind_mgmt), a
+    `watchdog.a` endpoint plus a chain to the controller prove the
+    in-band alert path deadlock-free on the ctrl NoC too.
+    """
+    base_x = topo.dim_x
+    topo.dim_x = base_x + 1
+    p = dict(params)
+    p["collector_ip"] = collector_ip
+    p["collector_port"] = collector_port
+    p["rules"] = rules
+    topo.add_tile("watchdog", "watchdog", base_x, 0, params=p)
+    topo.add_route("eth_tx", "const", None, "watchdog")
+    topo.add_chain("eth_tx", "watchdog")
+    bind_alert_path(topo)
+    return "watchdog"
+
+
+def bind_alert_path(topo):
+    """Declare the watchdog's in-band alert endpoint + chain on the ctrl
+    NoC so the alert path is covered by the ctrl-NoC deadlock analysis.
+    Idempotent; a no-op until both a watchdog and a controller exist
+    (stacks call this again after ``bind_mgmt``)."""
+    if not topo.has_tile("watchdog") or topo.has_tile("watchdog.a"):
+        return
+    ctrl = next((t.name for t in topo.tiles_on("ctrl")
+                 if t.kind == "controller"), None)
+    if ctrl is None:
+        return
+    td = topo.tile("watchdog")
+    topo.add_tile("watchdog.a", "mgmt_ep", td.x, td.y + 1, noc="ctrl")
+    topo.add_chain("watchdog.a", ctrl)
