@@ -12,7 +12,7 @@ PYTHONPATH := src:.$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
 .PHONY: test-fast test bench bench-mgmt bench-tcp-loss bench-stream \
-        bench-rpc-tail bench-obs lint-reasons
+        bench-rpc-tail bench-obs bench-shard lint-reasons
 
 test-fast:
 	$(PY) -m pytest -q -m "not slow"
@@ -56,3 +56,10 @@ bench-rpc-tail:
 # the scanned region; APPENDS to BENCH_obs.json
 bench-obs:
 	$(PY) benchmarks/bench_obs.py
+
+# sharded-dataplane gate: RSS-replicated stack under shard_map on a
+# host-simulated 8-device mesh — certified (no collectives, no host
+# callbacks, bit-identical egress) projected aggregate must be >= 4x the
+# single-device baseline; APPENDS to BENCH_shard.json
+bench-shard:
+	$(PY) benchmarks/bench_shard.py

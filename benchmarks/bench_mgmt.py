@@ -10,10 +10,12 @@ within noise, since management frames ride the same batch and the ctrl
 NoC adds no dataplane stages."""
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row, time_call
+from benchmarks.common import append_trajectory, row, time_call
 from repro.apps import echo
 from repro.core import control
 from repro.mgmt.console import command_frame
@@ -23,6 +25,8 @@ from repro.net.stack import UdpStack
 IP_C, IP_S = F.ip("10.0.0.2"), F.ip("10.0.0.1")
 MGMT_PORT = 9909
 BATCH = 100          # 1 management frame = 1% of the batch
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_mgmt.json")
 
 
 def _batches():
@@ -60,6 +64,9 @@ def run():
                f"contends)"),
            row("mgmt_ack_batch", us["mgmt"] / BATCH,
                "management-only acks")]
+    append_trajectory(OUT_PATH, {
+        "batch": BATCH, "pure_us": us["pure"], "mixed_us": us["mixed"],
+        "mgmt_only_us": us["mgmt"], "interleave_overhead_pct": overhead})
     return out
 
 

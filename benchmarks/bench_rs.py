@@ -6,11 +6,14 @@ projection from the kernel's compiled traffic (paper: 15 Gbps/instance,
 62 Gbps at 4) and bytes-moved-per-op (the energy proxy)."""
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import hlo_traffic, row, time_call
+from benchmarks.common import (append_trajectory, hlo_traffic, row,
+                               time_call)
 from repro.apps import reed_solomon
 from repro.kernels.rs_encode import ops as rs_ops
 from repro.launch.hlo_analysis import HBM_BW
@@ -19,10 +22,12 @@ from repro.net.stack import UdpStack
 
 IP_C, IP_S = F.ip("10.0.0.2"), F.ip("10.0.0.1")
 REQS = 16
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_rs.json")
 
 
 def run():
     out = []
+    traj = {}
     rng = np.random.default_rng(0)
     # kernel-level projection (single instance)
     data = jnp.asarray(rng.integers(0, 256, (8, 65536), dtype=np.uint8))
@@ -34,6 +39,9 @@ def run():
                      data)
     out.append(row("table2_rs_kernel_1inst", us_k,
                    f"proj={proj_gbps:.1f}Gbps bytes/op={bytes_per_op:.0f}"))
+    traj["kernel_us"] = us_k
+    traj["kernel_proj_gbps"] = proj_gbps
+    traj["kernel_bytes_per_op"] = bytes_per_op
 
     # stack-level linear scale-out, 1..4 replicas
     block = rng.integers(0, 256, 4096, dtype=np.uint8).tobytes()
@@ -53,6 +61,9 @@ def run():
         out.append(row(f"table2_rs_stack_{n}inst", us / REQS,
                        f"proj={proj_gbps * n:.1f}Gbps cpu={speed:.3f}Gbps "
                        f"scale={base_us / us * n:.2f}x"))
+        traj[f"stack_{n}inst_us_per_req"] = us / REQS
+        traj[f"stack_{n}inst_cpu_gbps"] = speed
+    append_trajectory(OUT_PATH, traj)
     return out
 
 

@@ -7,10 +7,13 @@ segment generation.  Derived: TPU-projected segments/s and goodput from
 compiled HBM traffic."""
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import hlo_traffic, row, time_call
+from benchmarks.common import (append_trajectory, hlo_traffic, row,
+                               time_call)
 from repro.launch.hlo_analysis import HBM_BW
 from repro.net import eth, frames as F, ipv4, tcp
 
@@ -18,6 +21,8 @@ IP_C, IP_S = F.ip("10.0.0.2"), F.ip("10.0.0.1")
 BATCH = 32
 STREAM_BATCHES = 16
 SIZES = (64, 512, 1460)
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_tcp.json")
 
 
 def _rx_ready(conn, size):
@@ -42,6 +47,7 @@ def _rx_fn(conn, payload, length):
 
 def run():
     out = []
+    traj = {}
     for size in SIZES:
         conn = tcp.init(max_conns=4, rx_buf=BATCH * size + 4096,
                         local_ip=IP_S)
@@ -87,6 +93,10 @@ def run():
         us_tx = time_call(tx, conn2)
         out.append(row(f"fig7_tcp_tx_{size}B", us_tx,
                        f"cpu={1e6/us_tx:.0f}segs/s"))
+        traj[f"rx_sps_{size}B"] = cpu_sps
+        traj[f"rx_stream_sps_{size}B"] = stream_sps
+        traj[f"tx_us_{size}B"] = us_tx
+    append_trajectory(OUT_PATH, traj)
     return out
 
 

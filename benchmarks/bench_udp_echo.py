@@ -19,10 +19,13 @@ the per-batch path's hot reused buffers win — the TPU projection (and
 is the paper-relevant comparison there."""
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import hlo_traffic, row, time_call
+from benchmarks.common import (append_trajectory, hlo_traffic, row,
+                               time_call)
 from repro.apps import echo
 from repro.core.noc import chain_latency_ns
 from repro.launch.hlo_analysis import HBM_BW
@@ -33,9 +36,12 @@ IP_C, IP_S = F.ip("10.0.0.2"), F.ip("10.0.0.1")
 BATCH = 64
 STREAM_BATCHES = 16
 SIZES = (64, 256, 1024, 4096, 8962)
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_udp_echo.json")
 
 
 def run():
+    traj = {}
     stack = UdpStack([echo.make(port=7, n_replicas=1)], IP_S,
                      with_telemetry=False)
     # ONE jit per entry point, hoisted out of the size loop: jax caches a
@@ -75,11 +81,16 @@ def run():
         out.append(row(f"fig6_udp_echo_{size}B_stream", us_s / n_pkts,
                        f"cpu={stream_pps:.0f}pps "
                        f"speedup={stream_pps / cpu_pps:.2f}x"))
+        traj[f"pps_{size}B"] = cpu_pps
+        traj[f"stream_pps_{size}B"] = stream_pps
+        traj[f"proj_gbps_{size}B"] = min(proj_gbps, 100.0)
     # paper's latency figure: eth->ip->udp->app->udp->ip->eth chain, 1 byte
     lat = chain_latency_ns([(0, 0), (1, 0), (2, 0), (3, 0), (2, 1), (1, 1),
                             (0, 1)], payload_bytes=1)
     out.append(row("fig6_udp_echo_latency", lat / 1000,
                    f"noc_chain={lat:.0f}ns (paper: 368ns)"))
+    traj["noc_chain_latency_ns"] = lat
+    append_trajectory(OUT_PATH, traj)
     return out
 
 

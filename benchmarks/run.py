@@ -9,13 +9,15 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_flexibility, bench_lm, bench_mgmt,
                             bench_migration, bench_obs, bench_rs,
-                            bench_stream, bench_tcp, bench_tcp_loss,
-                            bench_udp_echo, bench_vr, bench_resources)
+                            bench_shard, bench_stream, bench_tcp,
+                            bench_tcp_loss, bench_udp_echo, bench_vr,
+                            bench_resources)
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_flexibility, bench_udp_echo, bench_stream, bench_tcp,
                 bench_tcp_loss, bench_rs, bench_vr, bench_migration,
-                bench_mgmt, bench_obs, bench_resources, bench_lm):
+                bench_mgmt, bench_obs, bench_shard, bench_resources,
+                bench_lm):
         try:
             mod.run()
         except Exception:

@@ -182,12 +182,27 @@ class StackCompiler:
         self.bindings = bindings or {}
         self.options = options or {}
 
+        # ---- replica groups (core.scaleout.replicate on non-app kinds) -
+        # validated here so an un-lowerable group fails loudly at compiler
+        # construction, naming the group — never silently mis-routing
+        self._rgroups: Dict[str, Dict] = {}
+        member_group: Dict[str, str] = {}
+        for gname, g in getattr(topo, "replica_groups", {}).items():
+            self._check_replica_group(gname, g)
+            if g.get("noc", "data") != noc:
+                continue
+            self._rgroups[gname] = g
+            for m in g["members"]:
+                member_group[m] = gname
+
         # ---- group tiles into nodes -----------------------------------
         self.nodes: Dict[str, _Node] = {}
         self._node_of: Dict[str, str] = {}
         for t in topo.tiles_on(noc):
-            nname = (t.kind.split(":", 1)[1] if t.kind.startswith("app:")
-                     else t.name)
+            if t.kind.startswith("app:"):
+                nname = t.kind.split(":", 1)[1]
+            else:
+                nname = member_group.get(t.name, t.name)
             node = self.nodes.get(nname)
             if node is None:
                 self.nodes[nname] = _Node(nname, t.kind, [t],
@@ -199,16 +214,64 @@ class StackCompiler:
                         f"{t.kind!r}")
                 node.members.append(t)
             self._node_of[t.name] = nname
+        for gname in self._rgroups:
+            # upstream CAM entries still target the group name
+            self._node_of.setdefault(gname, gname)
 
         # ---- route edges between nodes --------------------------------
+        # replica members carry identical route clones — dedupe so the
+        # group node gets each logical edge once (table slots included)
         self.edges: List[Tuple[str, str, RouteEntry]] = []
+        seen_edges = set()
         for t in topo.tiles_on(noc):
             for r in t.routes:
                 src = self._node_of.get(t.name)
                 dst = self._node_of.get(r.next_tile)
                 if src is None or dst is None or src == dst:
                     continue                       # intra-group / other noc
+                ek = (src, dst, r.match, r.key)
+                if ek in seen_edges:
+                    continue
+                seen_edges.add(ek)
                 self.edges.append((src, dst, r))
+
+    # kinds whose state/behavior is structurally singleton: lowering N
+    # copies behind one dispatch stage would be meaningless or wrong
+    _UNREPLICABLE = ("mgmt", "controller", "ctrl_in", "mgmt_ep",
+                     "int_mirror", "watchdog")
+
+    def _check_replica_group(self, gname: str, g: Dict) -> None:
+        members = g.get("members") or []
+        if not members:
+            raise CompileError(
+                f"replica group {gname!r} has no members — nothing to "
+                f"lower behind the dispatch stage")
+        kind = g.get("kind", "")
+        if kind in self._UNREPLICABLE or kind.startswith("app:"):
+            raise CompileError(
+                f"replica group {gname!r} replicates kind {kind!r}, which "
+                f"cannot be lowered (management/structural tiles are "
+                f"singletons; app:* tiles scale via AppDecl.n_replicas)")
+        policy = g.get("policy")
+        if policy not in ("flow_hash", "round_robin", "port_match"):
+            raise CompileError(
+                f"replica group {gname!r} has un-lowerable dispatch "
+                f"policy {policy!r} (expected flow_hash, round_robin or "
+                f"port_match)")
+        if policy == "port_match" and g.get("base_port") is None:
+            raise CompileError(
+                f"replica group {gname!r} uses port_match dispatch but "
+                f"declares no base_port (replicate(..., base_port=...))")
+        for m in members:
+            if not self.topo.has_tile(m):
+                raise CompileError(
+                    f"replica group {gname!r} member {m!r} is not a "
+                    f"declared tile")
+            mk = self.topo.tile(m).kind
+            if mk != kind:
+                raise CompileError(
+                    f"replica group {gname!r} mixes kinds {kind!r} and "
+                    f"{mk!r} (member {m!r})")
 
     # ---- ordering --------------------------------------------------------
     def _reachable(self, ingress: str) -> List[str]:
@@ -372,8 +435,11 @@ class StackCompiler:
 
         pipe_meta = {
             "order": order,
+            # dispatch groups the management HEALTH_SET path addresses:
+            # app groups AND lowered replica groups, in execution order
             "groups": [n for n in order
-                       if self.nodes[n].kind.startswith("app:")],
+                       if self.nodes[n].kind.startswith("app:")
+                       or n in self._rgroups],
             "tables": sorted(table_entries),
         }
 
@@ -381,6 +447,17 @@ class StackCompiler:
         for i, n in enumerate(order):
             node = self.nodes[n]
             spec = resolve_kind(node.kind)
+            if n in self._rgroups:
+                # RSS lowering: the inner tile fn runs once over the whole
+                # batch (replicas = batched lanes); the dispatch policy
+                # table rides in the scan carry as runtime state
+                g = self._rgroups[n]
+                spec = dataclasses.replace(
+                    spec,
+                    fn=_replica_group_fn(spec.fn, n, g["policy"],
+                                         g.get("base_port")),
+                    init=_replica_group_init(spec.init, n,
+                                             len(g["members"])))
             binding = self.bindings.get(n, self.bindings.get(node.kind))
             ctx = TileContext(name=n, kind=node.kind, members=node.members,
                               binding=binding, options=self.options,
@@ -803,6 +880,47 @@ class CompiledPipeline:
 
 
 # ---------------------------------------------------------------------------
+# replica-group lowering: RSS dispatch in front of a cloned hot tile
+# (core.scaleout.replicate on udp_rx / rs_serve / lm_serve / tcp_rx ...).
+# The inner tile fn runs ONCE over the whole batch — replicas are batched
+# *lanes*, and the dispatch stage assigns each row its lane from the live
+# policy table (flow_hash / round_robin / port_match).  The table is scan-
+# carry state, so HEALTH_SET / drain_replica re-balances the lanes on the
+# next batch with no retrace, exactly like the app-group dispatch path.
+
+
+def _replica_group_init(inner: Optional[Callable], gname: str, n: int):
+    def init(ctx: TileContext) -> dict:
+        from repro.core.scaleout import make_dispatch
+        st = inner(ctx) if inner is not None else {}
+        deep_merge(st, {"dispatch": {gname: make_dispatch(list(range(n)))}})
+        return st
+    return init
+
+
+def _replica_group_fn(inner: Callable, gname: str, policy: str,
+                      base_port: Optional[int]):
+    def fn(state, carrier, pred, ctx):
+        from repro.core.scaleout import dispatch_lane
+        # the inner kind may parse the very fields the hash keys on
+        # (udp_rx writes src_port/dst_port), so the lane assignment reads
+        # the *post-parse* meta — the NIC-RSS view of the full header
+        state, carrier, ok = inner(state, carrier, pred, ctx)
+        dispatch = dict(state["dispatch"])
+        d, lane = dispatch_lane(dispatch[gname], policy, carrier["meta"],
+                                pred, base_port)
+        dispatch[gname] = d
+        state = dict(state)
+        state["dispatch"] = dispatch
+        carrier = dict(carrier)
+        info = dict(carrier["info"])
+        info[f"{gname}.lane"] = jnp.where(pred, lane, -1)
+        carrier["info"] = info
+        return state, carrier, ok
+    return fn
+
+
+# ---------------------------------------------------------------------------
 # the generic app-group tile function (dispatch + process, paper §4.2/§5)
 
 
@@ -826,20 +944,15 @@ def _app_group(state, carrier, pred, ctx):
 
     `pred` IS the arrival predicate derived from the udp_port route
     entries, so port matching lives in the topology, not here."""
-    from repro.core.scaleout import by_flow_hash, by_port, round_robin
+    from repro.core.scaleout import dispatch_lane
     a = ctx.binding
     m = carrier["meta"]
     at_app = pred
 
     dispatch = dict(state["dispatch"])
     apps = dict(state["apps"])
-    d = dispatch[a.name]
-    if a.policy == "round_robin":
-        d, replica = round_robin(d, at_app)
-    elif a.policy == "flow_hash":
-        replica = by_flow_hash(d, m)
-    else:                                          # port_match
-        replica = by_port(d, m["dst_port"], a.port)
+    d, replica = dispatch_lane(dispatch[a.name], a.policy, m, at_app,
+                               base_port=a.port)
     dispatch[a.name] = d
 
     ast, nb, nl = a.process(apps[a.name], carrier["body"], carrier["blen"],

@@ -46,6 +46,13 @@ Command encoding (RPC payload, all big-endian u32):
                          completed window): one node's per-window
                          counter deltas from the series ring
                          (repro.obs.series), wide-response format
+     14 = GROUP_READ     (target=dispatch group index): one replica
+                         group's live state — [n_replicas, healthy
+                         bitmap, per-replica served counters...] —
+                         wide-response format.  healthy is the *live*
+                         bitmap (HEALTH_SET earlier in the same batch
+                         is visible); served counters are snapshots
+                         through the previous batch, like LOG_READ
 
 Response encoding (RPC payload, all big-endian u32, 8 words fixed):
   [op, version, status, w0, w1, w2, w3, w4]
@@ -86,6 +93,7 @@ OP_HISTO_READ = 10
 OP_DROP_READ = 11
 OP_SLO_SET = 12
 OP_SERIES_READ = 13
+OP_GROUP_READ = 14
 
 CMD_WORDS = 5
 CMD_BYTES = 4 * CMD_WORDS
@@ -108,8 +116,11 @@ class ControllerState:
 
 
 def make_controller() -> ControllerState:
-    z = jnp.zeros((), jnp.int32)
-    return ControllerState(version=z, last_op=z, acks=z)
+    # distinct buffers per field: donated entry points (stream_fn) reject
+    # a state pytree that aliases one buffer across leaves
+    return ControllerState(version=jnp.zeros((), jnp.int32),
+                           last_op=jnp.zeros((), jnp.int32),
+                           acks=jnp.zeros((), jnp.int32))
 
 
 def decode_command(payload_words: jnp.ndarray) -> Dict[str, jnp.ndarray]:
@@ -231,6 +242,23 @@ def serve_table_row(table, row_id, want):
         row = row[:OBS_ROW_WORDS]
     served = jnp.where(ok, OBS_ROW_WORDS, 0)
     return row, served
+
+
+def serve_group_row(healthy, served, want):
+    """Serve one dispatch group's state in the wide-response layout:
+    [n_replicas, healthy bitmap, per-replica served counters...] padded
+    to OBS_ROW_WORDS.  ``healthy`` is (N,) bool, ``served`` (N,) int32.
+    Returns (row, served_word_count)."""
+    n = healthy.shape[0]
+    bitmap = jnp.sum(healthy.astype(jnp.uint32)
+                     << jnp.arange(n, dtype=jnp.uint32))
+    k = min(n, OBS_ROW_WORDS - 2)
+    row = jnp.concatenate([
+        jnp.stack([jnp.full((), n, jnp.uint32), bitmap]),
+        served[:k].astype(jnp.uint32),
+        jnp.zeros((OBS_ROW_WORDS - 2 - k,), jnp.uint32)])
+    row = jnp.where(want, row, jnp.zeros_like(row))
+    return row, jnp.where(want, 2 + k, 0)
 
 
 def serve_series_row(ring, wr, win_len, age, node, want):

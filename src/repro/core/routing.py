@@ -94,6 +94,18 @@ def fnv1a(fields: Sequence[jnp.ndarray]) -> jnp.ndarray:
 
 
 def flow_hash(meta: Dict[str, jnp.ndarray]) -> jnp.ndarray:
-    """Standard 4-tuple hash: (src_ip, dst_ip, src_port, dst_port)."""
-    return fnv1a([meta["src_ip"], meta["dst_ip"],
-                  meta["src_port"], meta["dst_port"]])
+    """Standard 4-tuple hash: (src_ip, dst_ip, src_port, dst_port).
+
+    FNV-1a's multiply only diffuses bits *upward*, so bit k of the raw
+    hash is a linear function of input bits <= k — taking it mod a small
+    replica count collapses (e.g. a client whose src_ip and src_port
+    step together hits one RSS lane forever).  A murmur3-style avalanche
+    finalizer makes every output bit depend on every input bit."""
+    h = fnv1a([meta["src_ip"], meta["dst_ip"],
+               meta["src_port"], meta["dst_port"]])
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h

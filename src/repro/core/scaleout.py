@@ -16,7 +16,7 @@ replica) without rebuilding anything.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,17 +27,29 @@ from repro.core.topology import TopologyConfig
 
 def replicate(topo: TopologyConfig, base_name: str, n: int,
               coords: Sequence[Tuple[int, int]],
-              policy: str = "round_robin") -> List[str]:
+              policy: str = "round_robin",
+              base_port: Optional[int] = None) -> List[str]:
     """Clone tile `base_name` into n replicas (config-level operation).
     Returns the replica names.  Chains referencing the base tile are
-    expanded to cover every replica (for deadlock analysis)."""
+    expanded to cover every replica (for deadlock analysis).
+
+    Non-app kinds (udp_rx, rs_serve, tcp_rx, ...) are additionally
+    registered as a *replica group* on the topology: upstream routes keep
+    targeting `base_name`, which now names the group, and the compiler
+    lowers the group to one RSS-style dispatch stage whose policy table
+    is runtime state (the control plane drains/restores replicas with no
+    retrace).  ``app:*`` tiles keep the pre-existing semantics — they
+    collapse into an app group by kind, dispatched via their AppDecl.
+    `base_port` is required by the ``port_match`` policy (dst_port -
+    base_port indexes the replica)."""
     assert len(coords) == n
     base = topo.tile(base_name)
     names = []
     for i, (x, y) in enumerate(coords):
         nm = f"{base_name}.{i}"
-        t = topo.add_tile(nm, base.kind, x, y, base.noc)
-        t.routes = list(base.routes)
+        t = topo.add_tile(nm, base.kind, x, y, base.noc,
+                          params=dict(base.params))
+        t.routes = [dataclasses.replace(r) for r in base.routes]
         names.append(nm)
     # expand chains: every chain through base becomes n chains
     new_chains = []
@@ -49,6 +61,11 @@ def replicate(topo: TopologyConfig, base_name: str, n: int,
             new_chains.append(c)
     topo.chains = new_chains
     topo.tiles = [t for t in topo.tiles if t.name != base_name]
+    if not base.kind.startswith("app:"):
+        topo.replica_groups[base_name] = {
+            "members": list(names), "policy": policy, "kind": base.kind,
+            "base_port": base_port, "noc": base.noc,
+        }
     return names
 
 
@@ -62,6 +79,7 @@ class DispatchState:
     replica_ids: jnp.ndarray    # (N,) int32 tile ids
     healthy: jnp.ndarray        # (N,) bool — control plane can mark down
     rr_counter: jnp.ndarray     # () int32
+    served: jnp.ndarray         # (N,) int32 packets dispatched per replica
 
 
 def make_dispatch(replica_tile_ids: Sequence[int]) -> DispatchState:
@@ -70,6 +88,7 @@ def make_dispatch(replica_tile_ids: Sequence[int]) -> DispatchState:
         replica_ids=jnp.asarray(replica_tile_ids, jnp.int32),
         healthy=jnp.ones((n,), bool),
         rr_counter=jnp.zeros((), jnp.int32),
+        served=jnp.zeros((n,), jnp.int32),
     )
 
 
@@ -107,3 +126,24 @@ def by_port(d: DispatchState, port, base_port: int) -> jnp.ndarray:
 def mark_health(d: DispatchState, replica: int, up: bool) -> DispatchState:
     """Control-plane operation: drain or restore one replica."""
     return dataclasses.replace(d, healthy=d.healthy.at[replica].set(up))
+
+
+def dispatch_lane(d: DispatchState, policy: str, meta, pred,
+                  base_port: Optional[int] = None
+                  ) -> Tuple[DispatchState, jnp.ndarray]:
+    """One RSS dispatch decision per batch row under `policy`: returns
+    (d', lane).  Advances rr_counter (round_robin) and bumps the
+    per-replica served counters for rows where `pred` holds — the
+    accounting the control plane reads back to verify a drain actually
+    rebalanced traffic."""
+    if policy == "round_robin":
+        d, lane = round_robin(d, pred)
+    elif policy == "flow_hash":
+        lane = by_flow_hash(d, meta)
+    elif policy == "port_match":
+        lane = by_port(d, meta["dst_port"], base_port)
+    else:
+        raise ValueError(f"unknown dispatch policy {policy!r}")
+    d = dataclasses.replace(
+        d, served=d.served.at[lane].add(pred.astype(jnp.int32)))
+    return d, lane

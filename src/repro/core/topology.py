@@ -62,6 +62,13 @@ class TopologyConfig:
     dim_y: int
     tiles: List[TileDecl] = dataclasses.field(default_factory=list)
     chains: List[List[str]] = dataclasses.field(default_factory=list)
+    # replica groups registered by core.scaleout.replicate: group name ->
+    # {"members": [...], "policy": ..., "kind": ..., "base_port": ...,
+    #  "noc": ...}.  A group name is a valid route *target* (the upstream
+    # CAM keeps its pre-replication entry); the compiler lowers the group
+    # to one RSS dispatch stage.  Group names are NOT tiles: tile()/
+    # has_tile() stay strict, has_node()/members_of() resolve both.
+    replica_groups: Dict[str, Dict] = dataclasses.field(default_factory=dict)
 
     # ---- construction helpers (the "XML" the user writes) -----------------
     def add_tile(self, name: str, kind: str, x: int, y: int,
@@ -73,10 +80,17 @@ class TopologyConfig:
     def add_route(self, tile: str, match: str, key: Optional[int],
                   next_tile: str) -> None:
         assert match in MATCH_SPACES, match
-        self.tile(tile).routes.append(RouteEntry(match, key, next_tile))
+        for nm in self.members_of(tile):
+            self.tile(nm).routes.append(RouteEntry(match, key, next_tile))
 
     def add_chain(self, *names: str) -> None:
-        self.chains.append(list(names))
+        # a replica-group name in a chain expands to one chain per member
+        # (same treatment replicate() applies to pre-existing chains)
+        expanded: List[List[str]] = [[]]
+        for n in names:
+            members = self.members_of(n)
+            expanded = [c + [m] for c in expanded for m in members]
+        self.chains.extend(expanded)
 
     def insert_on_path(self, name: str, kind: str, x: int, y: int,
                        src: str, dst: str, noc: str = "data",
@@ -93,16 +107,19 @@ class TopologyConfig:
         — an encapsulation tile classifies on the *outer* header (e.g.
         ip_proto=4 for IP-in-IP), not on the key the original route used."""
         t = self.add_tile(name, kind, x, y, noc)
-        for r in self.tile(src).routes:
-            if r.next_tile == dst:
-                r.next_tile = name
-                if match is not None:
-                    assert match in MATCH_SPACES, match
-                    r.match, r.key = match, key
+        src_names = set(self.members_of(src))
+        dst_names = {dst} | set(self.members_of(dst))
+        for nm in src_names:
+            for r in self.tile(nm).routes:
+                if r.next_tile in dst_names:
+                    r.next_tile = name
+                    if match is not None:
+                        assert match in MATCH_SPACES, match
+                        r.match, r.key = match, key
         t.routes.append(RouteEntry("const", None, dst))
         for c in self.chains:
             for i in range(len(c) - 1):
-                if c[i] == src and c[i + 1] == dst:
+                if c[i] in src_names and c[i + 1] in dst_names:
                     c.insert(i + 1, name)
                     break
         return t
@@ -116,6 +133,23 @@ class TopologyConfig:
 
     def has_tile(self, name: str) -> bool:
         return any(t.name == name for t in self.tiles)
+
+    def is_replica_group(self, name: str) -> bool:
+        return name in self.replica_groups
+
+    def has_node(self, name: str) -> bool:
+        """True for a declared tile OR a registered replica group."""
+        return self.has_tile(name) or name in self.replica_groups
+
+    def members_of(self, name: str) -> List[str]:
+        """A replica group's member tile names; [name] for a plain tile."""
+        g = self.replica_groups.get(name)
+        return list(g["members"]) if g is not None else [name]
+
+    def routes_of(self, name: str) -> List[RouteEntry]:
+        """A tile's routes, or a replica group's (the members carry
+        identical clones — the first member's list is the group's)."""
+        return self.tile(self.members_of(name)[0]).routes
 
     def coords_of(self, chain: Sequence[str]) -> List[Coord]:
         return [self.tile(n).coord for n in chain]
@@ -145,9 +179,21 @@ class TopologyConfig:
                 if n not in names:
                     errors.append(f"chain {c} references unknown tile {n!r}")
         noc_of = {t.name: t.noc for t in self.tiles}
+        for gname, g in self.replica_groups.items():
+            if gname in names:
+                errors.append(f"replica group {gname!r} collides with a "
+                              f"declared tile name")
+            if not g.get("members"):
+                errors.append(f"replica group {gname!r} has no members")
+            for m in g.get("members", []):
+                if m not in names:
+                    errors.append(f"replica group {gname!r} member {m!r} "
+                                  f"is not a declared tile")
+            # a route aimed at the group resolves to its members' noc
+            noc_of[gname] = g.get("noc", "data")
         for t in self.tiles:
             for r in t.routes:
-                if r.next_tile not in names:
+                if r.next_tile not in noc_of:
                     errors.append(f"route on {t.name!r} -> unknown tile "
                                   f"{r.next_tile!r}")
                 elif noc_of[r.next_tile] != t.noc:
@@ -198,6 +244,9 @@ class TopologyConfig:
                 "routes": [dataclasses.asdict(r) for r in t.routes],
             } for t in self.tiles],
             "chains": self.chains,
+            **({"replica_groups": {g: dict(v) for g, v
+                                   in self.replica_groups.items()}}
+               if self.replica_groups else {}),
         }
 
     @classmethod
@@ -210,6 +259,8 @@ class TopologyConfig:
                 t.routes.append(RouteEntry(r["match"], r["key"],
                                            r["next_tile"]))
         topo.chains = [list(c) for c in d.get("chains", [])]
+        topo.replica_groups = {g: dict(v) for g, v
+                               in d.get("replica_groups", {}).items()}
         return topo
 
     def config_loc(self, tile_names: Sequence[str]) -> int:

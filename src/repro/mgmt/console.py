@@ -58,7 +58,7 @@ def parse_response(frame: bytes) -> Dict:
         out["rows"] = rows
         out["row"] = {}
     elif w[0] in (control.OP_HISTO_READ, control.OP_DROP_READ,
-                  control.OP_SERIES_READ):
+                  control.OP_SERIES_READ, control.OP_GROUP_READ):
         # snapshot table row: status = served word count, then the row
         served = min(w[2], control.OBS_ROW_WORDS)
         out["table_row"] = list(struct.unpack_from(
@@ -245,6 +245,23 @@ class MgmtConsole:
         if r.get("table_row"):
             r["reasons"] = {reasons.name(i): c
                             for i, c in enumerate(r["table_row"]) if c}
+        return state, r
+
+    def read_group(self, state, group: str):
+        """One replica group's live state: healthy replicas + per-replica
+        served-packet counters (RSS balance check).  The healthy bitmap
+        is live — a drain earlier in the same batch is visible; served
+        counters run through the previous batch, like LOG_READ."""
+        state, (r,) = self.roundtrip(state, [
+            (control.OP_GROUP_READ, self.group_ids[group], 0, 0, 0)])
+        tr = r.get("table_row") or []
+        if len(tr) >= 2:
+            n = tr[0]
+            r["group"] = {
+                "n_replicas": n,
+                "healthy": [bool((tr[1] >> i) & 1) for i in range(n)],
+                "served": tr[2:2 + n],
+            }
         return state, r
 
     def set_slo(self, state, slot: int, metric, node, raise_thr: int,

@@ -58,7 +58,9 @@ def bind_mgmt(topo: TopologyConfig, port: int = DEFAULT_MGMT_PORT,
     base_x = topo.dim_x
     topo.dim_x += 2
 
-    if not topo.has_tile("udp_rx"):
+    # has_node: a replicated parser (an RSS group named "udp_rx") counts
+    # as bound — the port route lands on every member, the chain expands
+    if not topo.has_node("udp_rx"):
         topo.add_tile("udp_rx", "udp_rx", base_x, 0)
         topo.add_route("ip_rx", "ip_proto", ipv4.PROTO_UDP, "udp_rx")
     if not topo.has_tile("udp_tx"):
@@ -152,6 +154,9 @@ def mgmt_tile(state, carrier, pred, ctx):
 
     groups = [g for g in pm["groups"] if g in state.get("dispatch", {})]
     healthy0 = tuple(state["dispatch"][g].healthy for g in groups)
+    # GROUP_READ serves served-counter snapshots (totals through the
+    # previous batch — the dispatch tiles run before mgmt sees traffic)
+    served0 = tuple(state["dispatch"][g].served for g in groups)
 
     rts = state.get("routes") or {}
     tnames = [t for t in pm["tables"] if t in rts]
@@ -371,9 +376,24 @@ def mgmt_tile(state, carrier, pred, ctx):
         want_s = v & (op == control.OP_SERIES_READ) & has_series
         srow, sserved = control.serve_series_row(
             ring0, ser_wr0, c["win_len"], a, target, want_s)
-        want_obs = want_h | want_d | want_s
-        obs_served = jnp.where(want_h, hserved,
-                               jnp.where(want_d, dserved, sserved))
+
+        # GROUP_READ — one replica group's healthy bitmap (live, from the
+        # scan carry: a HEALTH_SET earlier in this batch is visible) plus
+        # per-replica served counters (snapshot), wide-response layout
+        want_g = v & (op == control.OP_GROUP_READ) & (len(groups) > 0)
+        grow = jnp.zeros((control.OBS_ROW_WORDS,), jnp.uint32)
+        gserved = jnp.zeros((), jnp.int32)
+        for gi in range(len(groups)):
+            r_, s_ = control.serve_group_row(
+                c["healthy"][gi], served0[gi], want_g & (target == gi))
+            grow = grow | r_
+            gserved = gserved | s_
+
+        want_obs = want_h | want_d | want_s | want_g
+        obs_served = jnp.where(
+            want_h, hserved,
+            jnp.where(want_d, dserved,
+                      jnp.where(want_g, gserved, sserved)))
 
         # LOG_READ — serve a counter row, REQ_BUF backpressure
         want = v & (op == control.OP_LOG_READ) & (n_logs > 0)
@@ -398,7 +418,9 @@ def mgmt_tile(state, carrier, pred, ctx):
         rng = control.encode_range_response(w[0], version, served, rng_rows)
         wide = control.encode_obs_response(
             w[0], version, obs_served,
-            jnp.where(want_h, hrow, jnp.where(want_d, drow, srow)))
+            jnp.where(want_h, hrow,
+                      jnp.where(want_d, drow,
+                                jnp.where(want_g, grow, srow))))
         resp = jnp.where(want_rng, rng, jnp.where(want_obs, wide, plain))
         blen = jnp.where(
             want_rng,

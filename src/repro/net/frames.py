@@ -114,6 +114,23 @@ class FrameArena:
         self.payload = np.zeros((n_batches, batch, max_len), np.uint8)
         self.length = np.zeros((n_batches, batch), np.int32)
 
+    @classmethod
+    def from_buffers(cls, payload: np.ndarray,
+                     length: np.ndarray) -> "FrameArena":
+        """Wrap existing (n_batches, batch, max_len) / (n_batches, batch)
+        buffers as an arena *view* — no copy: filling the view writes the
+        parent buffers in place.  This is how `ShardedFrameArena` hands
+        out per-shard arenas over one contiguous (S, N, B, L) store."""
+        if payload.shape[:2] != length.shape:
+            raise ValueError(
+                f"payload {payload.shape} and length {length.shape} "
+                f"disagree on (n_batches, batch)")
+        arena = cls.__new__(cls)
+        arena.n_batches, arena.batch, arena.max_len = payload.shape
+        arena.payload = payload
+        arena.length = length
+        return arena
+
     @property
     def capacity(self) -> int:
         """Total frame slots."""

@@ -47,7 +47,7 @@ def _bind_or_check_mgmt(topo: TopologyConfig, mgmt_port: int):
         from repro.obs import slo as _slo
         _slo.bind_alert_path(topo)
         return meta
-    bound = [r.key for r in topo.tile("udp_rx").routes
+    bound = [r.key for r in topo.routes_of("udp_rx")
              if r.next_tile == "mgmt" and r.match == "udp_port"]
     if mgmt_port not in bound:
         raise ValueError(
@@ -152,6 +152,29 @@ def udp_topology(apps: List[AppDecl], name="udp-stack") -> TopologyConfig:
         else:
             nm = f"{app.name}.0" if app.n_replicas > 1 else app.name
             topo.add_route("udp_rx", "udp_port", app.port, nm)
+    return topo
+
+
+def replicated_udp_topology(apps: List[AppDecl], n_rx: int = 2,
+                            policy: str = "flow_hash",
+                            name: str = "udp-rss-stack") -> TopologyConfig:
+    """UDP stack with the hot `udp_rx` parser replicated ``n_rx`` times
+    behind an RSS dispatch group — pure config edits on the plain
+    topology (the NAT-insertion pattern): widen the mesh, shift the app
+    tiles right to free a run of row-0 coordinates, then
+    `scaleout.replicate` the parser onto them.  Upstream routes keep
+    naming "udp_rx"; the compiler lowers the group to one dispatch stage
+    whose policy table is runtime state (drain/restore with no retrace)."""
+    from repro.core import scaleout
+    topo = udp_topology(apps, name=name)
+    topo.dim_x += n_rx - 1
+    for t in topo.tiles:
+        if t.kind.startswith("app:"):
+            t.x += n_rx - 1
+    coords = [(2 + i, 0) for i in range(n_rx)]
+    base_port = (apps[0].port if policy == "port_match" and apps else None)
+    scaleout.replicate(topo, "udp_rx", n_rx, coords, policy=policy,
+                       base_port=base_port)
     return topo
 
 

@@ -78,6 +78,34 @@ def check_reason_coverage() -> List[str]:
     return bad
 
 
+def check_topology_coverage(topo) -> List[str]:
+    """Reason-coverage offenders among the tile kinds one topology
+    actually instantiates, with replica groups resolved to their member
+    kind: a clone's lowered stage wraps the *base kind's* registered
+    function (`compiler._replica_group_fn`), so checking that kind is
+    exactly checking every clone — replication can never lose drop
+    attribution.  ``app:*`` kinds are bound at compile time and have no
+    registry entry; they are skipped."""
+    from repro.core.compiler import TILE_REGISTRY
+
+    kinds = {t.kind for t in topo.tiles}
+    for g in getattr(topo, "replica_groups", {}).values():
+        kinds.add(g["kind"])
+    bad = []
+    for kind in sorted(kinds):
+        spec = TILE_REGISTRY.get(kind)
+        if spec is None:
+            continue                         # app:* — compile-time bound
+        try:
+            squashes = _can_squash(spec.fn)
+            src = textwrap.dedent(inspect.getsource(spec.fn))
+        except (OSError, TypeError, SyntaxError):
+            continue
+        if squashes and "drop_reason" not in src:
+            bad.append(kind)
+    return bad
+
+
 def main() -> int:
     bad = check_reason_coverage()
     if bad:
@@ -87,6 +115,21 @@ def main() -> int:
             print(f"  {k}")
         return 1
     print("reason-coverage OK: every squashing tile attributes a reason")
+
+    # a replicated topology must keep coverage through the RSS lowering:
+    # the clones' lane dispatch wraps the base kind's function, so the
+    # per-topology check resolves groups back to that kind
+    from repro.apps import echo
+    from repro.net.stack import replicated_udp_topology
+    topo = replicated_udp_topology([echo.make(port=7)], n_rx=2)
+    tbad = check_topology_coverage(topo)
+    if tbad:
+        print("replicated-topology coverage FAILED:")
+        for k in tbad:
+            print(f"  {k}")
+        return 1
+    print(f"replicated-topology coverage OK: {topo.name} "
+          f"(groups: {sorted(topo.replica_groups)})")
     return 0
 
 

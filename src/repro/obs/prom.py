@@ -10,7 +10,7 @@ No device computation: one ``np.asarray`` per table at entry.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -31,14 +31,18 @@ def _fmt(name: str, labels: Dict[str, object], value) -> str:
 
 
 def render(ser: Dict, order: Sequence[str], slo=None,
-           windows: int = 1) -> str:
-    """Text exposition of the last `windows` completed windows."""
+           windows: int = 1, shard: Optional[int] = None) -> str:
+    """Text exposition of the last `windows` completed windows.  A
+    non-None ``shard`` adds a ``shard="<s>"`` label to every sample so a
+    scraper can aggregate or slice across a sharded dataplane."""
+    extra = {} if shard is None else {"shard": shard}
     lines: List[str] = []
     rows = series.series_rows(ser)[-max(1, windows):]
     lines.append(f"# HELP beehive_window_len_batches batches per "
                  f"series window")
     lines.append("# TYPE beehive_window_len_batches gauge")
-    lines.append(_fmt("window_len_batches", {}, int(ser["win_len"])))
+    lines.append(_fmt("window_len_batches", dict(extra),
+                      int(ser["win_len"])))
     for mi, mname in enumerate(series.METRICS):
         lines.append(f"# HELP beehive_window_{mname} {_HELP[mname]}")
         lines.append(f"# TYPE beehive_window_{mname} gauge")
@@ -47,21 +51,44 @@ def render(ser: Dict, order: Sequence[str], slo=None,
             for ni in range(row.shape[0]):
                 node = order[ni] if ni < len(order) else f"node{ni}"
                 lines.append(_fmt(f"window_{mname}",
-                                  {"node": node, "window": w},
+                                  {"node": node, "window": w, **extra},
                                   row[ni, mi]))
     if slo is not None:
         active = np.asarray(slo["active"])
         lines.append("# HELP beehive_slo_active rule is currently latched")
         lines.append("# TYPE beehive_slo_active gauge")
         for r in range(active.shape[0]):
-            lines.append(_fmt("slo_active", {"rule": r}, active[r]))
+            lines.append(_fmt("slo_active", {"rule": r, **extra},
+                              active[r]))
         lines.append("# HELP beehive_slo_alerts_total alert edges emitted")
         lines.append("# TYPE beehive_slo_alerts_total counter")
-        lines.append(_fmt("slo_alerts_total", {}, int(slo["alerts"])))
+        lines.append(_fmt("slo_alerts_total", dict(extra),
+                          int(slo["alerts"])))
     return "\n".join(lines) + "\n"
 
 
-def render_state(state: Dict, pipeline, windows: int = 1) -> str:
+def render_state(state: Dict, pipeline, windows: int = 1,
+                 shard: Optional[int] = None) -> str:
     """Convenience wrapper over a full stack state."""
     return render(state["telemetry"]["series"], pipeline.order,
-                  slo=state.get("slo"), windows=windows)
+                  slo=state.get("slo"), windows=windows, shard=shard)
+
+
+def render_sharded(state: Dict, pipeline, windows: int = 1) -> str:
+    """Exposition of a `ShardedStream` state (leading shard axis on
+    every leaf): one labeled block per shard, de-duplicated HELP/TYPE
+    headers, ready to mount behind one ``/metrics`` endpoint."""
+    import jax
+    shards = jax.tree.leaves(state)[0].shape[0]
+    lines: List[str] = []
+    seen = set()
+    for s in range(shards):
+        view = jax.tree.map(lambda x: x[s], state)
+        for ln in render_state(view, pipeline, windows=windows,
+                               shard=s).splitlines():
+            if ln.startswith("#"):
+                if ln in seen:
+                    continue
+                seen.add(ln)
+            lines.append(ln)
+    return "\n".join(lines) + "\n"

@@ -6,6 +6,8 @@ The reference functions below are verbatim ports of the hand-written
 `UdpStack.rx_tx` / `TcpStack.rx` / `TcpStack.tx_frame` pipelines from
 before the StackCompiler refactor — the compiled executor must reproduce
 them bit for bit on golden packet batches."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -64,6 +66,8 @@ def ref_udp_rx_tx(apps, state, payload, length):
             replica_tile = by_flow_hash(d, m)
         else:
             replica_tile = by_port(d, m["dst_port"], a.port)
+        d = dataclasses.replace(
+            d, served=d.served.at[replica_tile].add(at_app.astype(jnp.int32)))
         state["dispatch"][a.name] = d
         ast = state["apps"][a.name]
         ast, nb, nl = a.process(ast, body, blen, m, at_app, replica_tile)

@@ -1,20 +1,15 @@
 """Multi-device tests on a small forced-host mesh: compressed cross-pod
 psum (shard_map), sharded train-step consistency, elastic restore."""
-import os
-import subprocess
-import sys
-
-import numpy as np
 import pytest
 
-# These tests need >1 device; run them in a subprocess with forced host
-# devices so the rest of the suite keeps seeing 1 device.
+# These tests need >1 device; the shared `forced_host_mesh` fixture
+# (tests/conftest.py -> repro.launch.hostmesh) runs the script in a
+# subprocess with forced host devices so the rest of the suite keeps
+# seeing 1 device, and skips cleanly when forcing is unavailable.
 
 pytestmark = pytest.mark.slow
 
 _SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -84,11 +79,5 @@ def test_multi_device_suite(marker, multi_device_output):
 
 
 @pytest.fixture(scope="module")
-def multi_device_output():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=900,
-                         cwd=os.path.dirname(os.path.dirname(__file__)))
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
+def multi_device_output(forced_host_mesh):
+    return forced_host_mesh(_SCRIPT, devices=8)

@@ -1,0 +1,246 @@
+"""RSS tile replication: compiler lowering of `scaleout.replicate`
+groups, un-lowerable-group diagnostics, live drain/restore with zero
+frame loss and no retrace, GROUP_READ readback, flow-hash lane balance.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import echo
+from repro.core import control, scaleout
+from repro.core.compiler import CompileError, StackCompiler
+from repro.mgmt.console import MgmtConsole
+from repro.net import frames as F, rpc
+from repro.net.stack import UdpStack, replicated_udp_topology, udp_topology
+
+IP_C, IP_S = F.ip("10.0.0.2"), F.ip("10.0.0.1")
+
+
+def _stack(n_rx=2, policy="flow_hash", mgmt=9909):
+    apps = [echo.make(port=7)]
+    topo = replicated_udp_topology(apps, n_rx=n_rx, policy=policy)
+    return UdpStack(apps, IP_S, topo=topo, mgmt_port=mgmt)
+
+
+def _flow_frames(ports, per_flow=2, payload=b"x" * 16):
+    frames = []
+    for p in ports:
+        for i in range(per_flow):
+            frames.append(F.udp_rpc_frame(IP_C, IP_S, p, 7,
+                                          rpc.np_frame(rpc.MSG_ECHO, i,
+                                                       payload)))
+    return frames
+
+
+# ---------------------------------------------------------------------------
+# lowering
+
+
+def test_replicated_topology_compiles_and_groups():
+    st = _stack()
+    meta = st.pipeline.pipe_meta
+    assert "udp_rx" in meta["groups"]
+    # the group lowers to ONE node named after it; members are gone
+    assert "udp_rx" in meta["order"]
+    assert not any(n.startswith("udp_rx.r") for n in meta["order"])
+
+
+def test_replicated_egress_bit_identical_to_unreplicated():
+    apps = [echo.make(port=7)]
+    plain = UdpStack(apps, IP_S, topo=udp_topology(apps), mgmt_port=9909)
+    repl = _stack(n_rx=2)
+    frames = _flow_frames(range(5000, 5008))
+    p, l = F.to_batch(frames, 256)
+    p, l = jnp.asarray(p), jnp.asarray(l)
+    s0, q0, ql0, a0, _ = plain.rx_tx(plain.init_state(), p, l)
+    s1, q1, ql1, a1, info = repl.rx_tx(repl.init_state(), p, l)
+    assert np.array_equal(np.asarray(q0), np.asarray(q1))
+    assert np.array_equal(np.asarray(ql0), np.asarray(ql1))
+    assert np.array_equal(np.asarray(a0), np.asarray(a1))
+    assert int(np.asarray(a1).sum()) == len(frames)
+
+
+def test_flow_hash_lanes_distribute_and_stick():
+    st = _stack(n_rx=2)
+    frames = _flow_frames(range(5000, 5016), per_flow=2)
+    p, l = F.to_batch(frames, 256)
+    state, _, _, _, info = st.rx_tx(st.init_state(),
+                                    jnp.asarray(p), jnp.asarray(l))
+    lanes = np.asarray(info["udp_rx.lane"])
+    # per-flow stickiness: both frames of a flow take the same lane
+    assert np.array_equal(lanes[0::2], lanes[1::2])
+    # balance: the avalanche-finalized hash spreads 16 flows over 2 lanes
+    counts = np.bincount(lanes[lanes >= 0], minlength=2)
+    assert counts.min() >= 4, counts
+    # the dispatch state accounts every predicated frame
+    served = np.asarray(state["dispatch"]["udp_rx"].served)
+    assert served.sum() >= len(frames)
+
+
+# ---------------------------------------------------------------------------
+# un-lowerable groups raise clear errors naming the group (regression:
+# these used to compile silently with the group's routes dangling)
+
+
+def _topo_with_group(**edit):
+    apps = [echo.make(port=7)]
+    topo = replicated_udp_topology(apps, n_rx=2)
+    topo.replica_groups["udp_rx"].update(edit)
+    return topo, apps
+
+
+@pytest.mark.parametrize("edit,needle", [
+    ({"members": []}, "no members"),
+    ({"policy": "bogus"}, "un-lowerable dispatch policy"),
+    ({"policy": "port_match", "base_port": None}, "no base_port"),
+    ({"kind": "mgmt"}, "cannot be lowered"),
+])
+def test_unlowerable_group_raises_naming_group(edit, needle):
+    topo, apps = _topo_with_group(**edit)
+    with pytest.raises(CompileError) as e:
+        StackCompiler(topo, bindings={a.name: a for a in apps},
+                      options={"local_ip": IP_S}).compile("eth_rx")
+    assert "udp_rx" in str(e.value)
+    assert needle in str(e.value)
+
+
+def test_group_member_kind_mismatch_raises():
+    topo, apps = _topo_with_group()
+    # corrupt one member to a different kind
+    bad = topo.tile(topo.replica_groups["udp_rx"]["members"][1])
+    bad.kind = "ip_rx"
+    with pytest.raises(CompileError, match="mixes kinds"):
+        StackCompiler(topo, bindings={a.name: a for a in apps},
+                      options={"local_ip": IP_S}).compile("eth_rx")
+
+
+def test_replicate_refuses_unknown_policy_at_dispatch():
+    d = scaleout.make_dispatch([0, 1])
+    with pytest.raises(ValueError, match="unknown dispatch policy"):
+        scaleout.dispatch_lane(d, "bogus", {}, jnp.ones((4,), bool))
+
+
+# ---------------------------------------------------------------------------
+# live drain / restore: mid-stream, zero loss, zero retrace
+
+
+def test_drain_rehashes_to_survivors_mid_stream_no_loss_no_retrace():
+    st = _stack(n_rx=2)
+    con = MgmtConsole(st)
+    ports = list(range(5000, 5016))
+    frames = _flow_frames(ports, per_flow=2)
+    p, l = F.to_batch(frames, 256)
+    p, l = jnp.asarray(p), jnp.asarray(l)
+
+    traces = []
+
+    def counted(s, pp, ll):
+        traces.append(1)
+        return st.rx_tx(s, pp, ll)
+
+    fn = jax.jit(counted)
+    state = st.init_state()
+
+    # phase 1: both replicas up
+    state, q, ql, alive, info = fn(state, p, l)
+    lanes0 = np.asarray(info["udp_rx.lane"])
+    assert int(np.asarray(alive).sum()) == len(frames)
+    assert set(np.unique(lanes0[lanes0 >= 0])) == {0, 1}
+
+    # drain replica 0 in-band (the command batch reuses the same shapes,
+    # so it must hit the same compiled executable)
+    state, r = con.drain_replica(state, "udp_rx", 0)
+    assert r["status"] == 1
+
+    # phase 2: same traffic — every flow re-hashes onto the survivor,
+    # with ZERO dropped frames
+    state, q, ql, alive, info = fn(state, p, l)
+    lanes1 = np.asarray(info["udp_rx.lane"])
+    assert int(np.asarray(alive).sum()) == len(frames)
+    assert set(np.unique(lanes1[lanes1 >= 0])) == {1}
+
+    # restore re-admits: lanes return to the original assignment
+    state, r = con.restore_replica(state, "udp_rx", 0)
+    assert r["status"] == 1
+    state, q, ql, alive, info = fn(state, p, l)
+    lanes2 = np.asarray(info["udp_rx.lane"])
+    assert int(np.asarray(alive).sum()) == len(frames)
+    assert np.array_equal(lanes2, lanes0)
+
+    # the dataplane fn traced exactly once: drain/restore are runtime
+    # table writes, never a recompilation (TRACE_SET/ROUTE_SET discipline)
+    assert len(traces) == 1
+
+
+def test_drain_during_run_stream_zero_loss():
+    st = _stack(n_rx=2)
+    con = MgmtConsole(st)
+    ports = list(range(5000, 5008))
+    frames = _flow_frames(ports, per_flow=4)
+    arena = F.FrameArena(4, len(ports) * 4 // 4, 256)
+    arena.fill(frames)
+    state = st.init_state()
+    state, outs = st.run_stream(state, jnp.asarray(arena.payload),
+                                jnp.asarray(arena.length))
+    assert int(np.asarray(outs["alive"]).sum()) == len(frames)
+
+    state, r = con.drain_replica(state, "udp_rx", 0)
+    assert r["status"] == 1
+    state, outs = st.run_stream(state, jnp.asarray(arena.payload),
+                                jnp.asarray(arena.length))
+    # all frames survive the drain, on the surviving lane only
+    assert int(np.asarray(outs["alive"]).sum()) == len(frames)
+    lanes = np.asarray(outs["info"]["udp_rx.lane"])
+    assert set(np.unique(lanes[lanes >= 0])) == {1}
+
+
+# ---------------------------------------------------------------------------
+# GROUP_READ readback
+
+
+def test_group_read_serves_health_and_served_counters():
+    st = _stack(n_rx=2)
+    con = MgmtConsole(st)
+    state = st.init_state()
+    frames = _flow_frames(range(5000, 5016))
+    p, l = F.to_batch(frames, 256)
+    state, *_ = st.rx_tx(state, jnp.asarray(p), jnp.asarray(l))
+
+    state, r = con.read_group(state, "udp_rx")
+    g = r["group"]
+    assert g["n_replicas"] == 2
+    assert g["healthy"] == [True, True]
+    assert sum(g["served"]) >= len(frames)
+    assert min(g["served"]) > 0          # RSS actually spread the flows
+
+    state, _ = con.drain_replica(state, "udp_rx", 0)
+    state, r = con.read_group(state, "udp_rx")
+    assert r["group"]["healthy"] == [False, True]
+
+
+def test_serve_group_row_encoding():
+    healthy = jnp.asarray([True, False, True])
+    served = jnp.asarray([7, 0, 9], jnp.int32)
+    row, n = control.serve_group_row(healthy, served,
+                                     jnp.ones((), bool))
+    row = np.asarray(row)
+    assert row[0] == 3
+    assert row[1] == 0b101
+    assert list(row[2:5]) == [7, 0, 9]
+    assert int(n) == 5
+    row0, n0 = control.serve_group_row(healthy, served,
+                                       jnp.zeros((), bool))
+    assert int(n0) == 0 and not np.asarray(row0).any()
+
+
+# ---------------------------------------------------------------------------
+# lint coverage over replicated topologies
+
+
+def test_lint_covers_replica_group_kinds():
+    from repro.obs import lint
+    topo = replicated_udp_topology([echo.make(port=7)], n_rx=2)
+    assert lint.check_topology_coverage(topo) == []
